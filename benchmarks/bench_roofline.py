@@ -1,0 +1,76 @@
+"""Roofline table from the dry-run artifacts (single-pod mesh).
+
+For every compiled (arch x shape) cell: the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS = 6*N*D (train) / 2*N_active*D (serve), and
+the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs x chips).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.common.config import SHAPES_BY_NAME
+from repro.configs import get_config, list_archs
+from repro.launch.specs import arch_run_config
+from repro.roofline.analysis import model_flops
+from repro.roofline.analytic import analytic_terms
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run(quick: bool = False) -> dict:
+    rows = []
+    missing = 0
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape, cell in SHAPES_BY_NAME.items():
+            p = ART / f"{arch}__{shape}__single.json"
+            if not p.exists():
+                missing += 1
+                continue
+            d = json.loads(p.read_text())
+            if d.get("status") != "ok":
+                rows.append({"arch": arch, "shape": shape,
+                             "status": d.get("status"),
+                             "reason": d.get("reason", "")[:60]})
+                continue
+            r = d["roofline"]
+            run = arch_run_config(arch, shape, "single")
+            # analytic view: correct loop trip counts (the CPU backend's
+            # cost_analysis counts scan bodies once — see EXPERIMENTS)
+            a = analytic_terms(cfg, cell, run.microbatches)
+            rows.append({
+                "arch": arch, "shape": shape, "status": "ok",
+                "compute_s": a["a_compute_s"], "memory_s": a["a_memory_s"],
+                "collective_s": a["a_collective_s"],
+                "bottleneck": a["a_bottleneck"],
+                "roofline_step_s": a["a_step_s"],
+                "roofline_fraction": a["a_fraction"],
+                "model_flops": a["model_flops"],
+                "useful_ratio": a["a_fraction"],
+                "hlo_collective_s": r["collective_s"],
+                "peak_gb": d["memory"]["peak_estimate_bytes"] / 1e9,
+            })
+
+    print("\n[Roofline] single-pod (256 x v5e) — per-step terms:")
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dom':>6s} {'frac':>6s} {'useful':>7s} {'peak':>7s}")
+    print(hdr)
+    for row in rows:
+        if row["status"] != "ok":
+            print(f"{row['arch']:24s} {row['shape']:12s} {row['status']}: "
+                  f"{row.get('reason','')}")
+            continue
+        print(f"{row['arch']:24s} {row['shape']:12s} {row['compute_s']:9.4f} "
+              f"{row['memory_s']:9.4f} {row['collective_s']:9.4f} "
+              f"{row['bottleneck']:>6s} {row['roofline_fraction']:6.3f} "
+              f"{row['useful_ratio']:7.3f} {row['peak_gb']:6.1f}G")
+
+    ok = [r for r in rows if r["status"] == "ok"]
+    train_fracs = [r["roofline_fraction"] for r in ok if r["shape"] == "train_4k"]
+    return {"rows": rows, "cells_ok": len(ok), "cells_missing": missing,
+            "mean_train_fraction": float(np.mean(train_fracs)) if train_fracs else 0,
+            "headline": f"{len(ok)} cells, mean train roofline frac "
+                        f"{np.mean(train_fracs):.3f}" if train_fracs else "no cells"}

@@ -1,0 +1,26 @@
+"""Shared benchmark setup: cached detectors + profiled DeepStream system."""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+
+
+@lru_cache(maxsize=1)
+def detectors():
+    from repro.train.detector_train import train_detector
+    return (train_detector("light", steps=300, batch=12, cache=True),
+            train_detector("server", steps=600, batch=12, cache=True))
+
+
+@lru_cache(maxsize=2)
+def profiled_system(quick: bool = False, eval_frames: int = 5):
+    from repro.core.scheduler import DeepStreamSystem, SystemConfig
+    from repro.data.synthetic import MultiCameraScene, SceneConfig
+    light, server = detectors()
+    cfg = SystemConfig(eval_frames=eval_frames)
+    sysd = DeepStreamSystem(cfg, light, server)
+    prof = MultiCameraScene(SceneConfig(seed=42))
+    sysd.profile(prof, num_slots=3 if quick else 8,
+                 mlp_steps=300 if quick else 700)
+    return sysd

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME ...]
+
+Prints ``name,us_per_call,derived`` CSV rows plus per-benchmark result tables,
+and writes JSON artifacts to ``artifacts/bench/``.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import sys
+import time
+from pathlib import Path
+
+BENCHES = [
+    "bench_roidet",       # Fig. 4 + Fig. 5
+    "bench_allocation",   # section 5.2 optimality + scaling
+    "bench_e2e_utility",  # Fig. 3
+    "bench_latency",      # Fig. 6
+    "bench_kernels",      # kernel vs oracle timings
+    "bench_roofline",     # dry-run roofline table (reads artifacts/dryrun)
+]
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced slot/sample counts")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    ART.mkdir(parents=True, exist_ok=True)
+    names = args.only or BENCHES
+    print("name,us_per_call,derived")
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.perf_counter()
+        result = mod.run(quick=args.quick)
+        dt = (time.perf_counter() - t0) * 1e6
+        derived = result.get("headline", "")
+        print(f"{name},{dt:.0f},{derived}", flush=True)
+        (ART / f"{name}.json").write_text(json.dumps(result, indent=2,
+                                                     default=str))
+
+
+if __name__ == "__main__":
+    main()

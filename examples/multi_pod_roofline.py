@@ -1,0 +1,42 @@
+"""Dry-run one cell on the production meshes and print its roofline.
+
+    PYTHONPATH=src python examples/multi_pod_roofline.py \
+        [--arch yi-34b] [--shape decode_32k]
+
+Runs in a subprocess because the 512-device host-platform override must be
+set before jax initializes.
+"""
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-34b")
+    ap.add_argument("--shape", default="decode_32k")
+    args = ap.parse_args()
+    import os
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src")}
+    for mesh in ("single", "multi"):
+        print(f"== {args.arch} x {args.shape} on the {mesh} mesh ==")
+        subprocess.run([sys.executable, "-m", "repro.launch.dryrun",
+                        "--arch", args.arch, "--shape", args.shape,
+                        "--mesh", mesh], env=env, check=True)
+        art = (REPO / "artifacts" / "dryrun" /
+               f"{args.arch.replace('-', '_').replace('.', '_')}__{args.shape}__{mesh}.json")
+        if art.exists():
+            d = json.loads(art.read_text())
+            if d["status"] == "ok":
+                r = d["roofline"]
+                print(f"  bottleneck={r['bottleneck']} "
+                      f"step={r['roofline_step_s']*1e3:.1f}ms "
+                      f"fraction={r['roofline_fraction']:.3f}\n")
+
+
+if __name__ == "__main__":
+    main()

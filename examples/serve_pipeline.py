@@ -1,0 +1,62 @@
+"""End-to-end driver (the paper's kind: serving/analytics).
+
+    PYTHONPATH=src python examples/serve_pipeline.py
+
+The full deployment shape in miniature: the DeepStream ingest tier streams
+ROI-cropped segments from correlated cameras under a fluctuating bandwidth
+trace (elastic transmission active), and the analytics tier serves a zoo
+backbone (reduced qwen1.5-4b) with continuous-batched requests derived from
+the per-camera detections ("describe what camera i saw").
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.scheduler import DeepStreamSystem, SystemConfig
+from repro.data.synthetic import MultiCameraScene, SceneConfig, bandwidth_trace
+from repro.models.model import LM
+from repro.serve.engine import Request, ServeEngine
+from repro.train.detector_train import train_detector
+
+
+def main() -> None:
+    print("== ingest tier: DeepStream streaming loop ==")
+    light = train_detector("light", steps=300, batch=12)
+    server = train_detector("server", steps=600, batch=12)
+    sysd = DeepStreamSystem(SystemConfig(eval_frames=3), light, server)
+    sysd.profile(MultiCameraScene(SceneConfig(seed=42)), num_slots=3,
+                 mlp_steps=300)
+    scene = MultiCameraScene(SceneConfig(seed=9))
+    trace = bandwidth_trace("low", 5, seed=2)
+    logs = sysd.run(scene, trace, method="deepstream")
+    print(f"  {len(trace)} slots, mean utility {logs['utility'].mean():.3f}, "
+          f"mean bytes/slot {logs['bytes'].mean()/1024:.0f} KiB, "
+          f"elastic extra Kbps per slot: {np.round(logs['extra'], 1)}")
+
+    print("\n== analytics tier: batched backbone serving ==")
+    cfg = smoke_config("qwen1.5-4b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(lm, params, batch_slots=4, max_seq=64)
+    rng = np.random.default_rng(0)
+    # one request per camera per high-utility slot (token ids stand in for
+    # the ROI-token stream a production frontend would emit)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 24,
+                                               dtype=np.int32),
+                    max_new_tokens=8)
+            for i in range(8)]
+    stats = eng.run(reqs)
+    print(f"  served {stats['requests']} requests, {stats['tokens']} tokens "
+          f"in {stats['steps']} engine steps "
+          f"({stats['tok_per_s']:.1f} tok/s on this host)")
+    print("\n(at pod scale the same prefill/decode functions lower onto the "
+          "16x16 and 2x16x16 meshes — see repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

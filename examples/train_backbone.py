@@ -1,0 +1,43 @@
+"""Train a reduced zoo backbone for a few hundred steps on CPU.
+
+    PYTHONPATH=src python examples/train_backbone.py [--arch granite-8b]
+
+Exercises the full training stack: config -> LM (scanned layers, remat) ->
+prefetching data pipeline -> microbatched AdamW train step -> watchdog ->
+async atomic checkpoints -> restore-and-continue.
+"""
+import argparse
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    env = {"PYTHONPATH": str(REPO / "src")}
+    import os
+    env = {**os.environ, **env}
+    ckpt = "/tmp/repro_example_ckpt"
+    print(f"== phase 1: train {args.arch} (reduced) for {args.steps//2} steps ==")
+    subprocess.run([sys.executable, "-m", "repro.launch.train",
+                    "--arch", args.arch, "--smoke",
+                    "--steps", str(args.steps // 2), "--batch", "8",
+                    "--seq", "128", "--microbatches", "2",
+                    "--ckpt-dir", ckpt, "--ckpt-every", "20"],
+                   env=env, check=True)
+    print("\n== phase 2: simulate restart — resume from latest checkpoint ==")
+    subprocess.run([sys.executable, "-m", "repro.launch.train",
+                    "--arch", args.arch, "--smoke",
+                    "--steps", str(args.steps), "--batch", "8",
+                    "--seq", "128", "--microbatches", "2",
+                    "--ckpt-dir", ckpt, "--resume"],
+                   env=env, check=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Rate-distortion codec simulator (replaces libx264 — no codec silicon here).
+
+What the paper needs from H.264 (section 2.2, 7.3):
+  * bitrate-mode encoding: a segment compressed at bitrate b spreads b*T bits
+    over the encoded pixels -> fewer bits/pixel = more distortion;
+  * **cropping interaction**: ROI cropping shrinks the encoded area, so the
+    same bitrate buys more bits per ROI pixel (Fig. 4's mechanism);
+  * resolution scaling (r in R) trades pixel count for per-pixel fidelity;
+  * temporal redundancy: inter-frame coding makes N-frame segments cost far
+    less than N intra frames (the reason Reducto's frame filtering is
+    redundant with a codec, section 7.2);
+  * CRF mode: constant quality, content-proportional size (Fig. 5).
+
+Model: effective coded pixels P = roi_pixels * r^2 * (1 + rho*(N-1));
+bpp = b*T*1000 / P; distortion = additive Gaussian (sigma0 * exp(-bpp/beta))
++ value quantization with step q(bpp) + resolution blur (avg-pool + nearest
+upsample).  Constants calibrated so the detector's accuracy-vs-bitrate curve
+saturates inside the paper's 50..1000 Kbps range.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CodecConfig:
+    bitrates_kbps: Tuple[int, ...] = (50, 100, 200, 400, 800, 1000)
+    resolutions: Tuple[float, ...] = (1.0, 0.75, 0.5)
+    slot_seconds: float = 1.0
+    temporal_rho: float = 0.25        # inter-frame residual cost fraction
+    sigma0: float = 0.35              # noise at bpp -> 0
+    beta: float = 1.6                 # bpp decay constant
+    quant_scale: float = 10.0         # quantization levels per unit bpp
+    crf_bpp: float = 4.0              # "visually lossless" CRF-18 analogue
+
+
+def effective_pixels(cfg: CodecConfig, roi_pixels: float, num_frames: int,
+                     res: float) -> float:
+    return roi_pixels * res * res * (1.0 + cfg.temporal_rho * (num_frames - 1))
+
+
+def _avg_pool(frames: jax.Array, k: int) -> jax.Array:
+    N, H, W = frames.shape
+    x = frames[:H // k * k // 1].reshape(N, H // k, k, W // k, k)
+    return x.mean(axis=(2, 4))
+
+
+def _resolution_blur(frames: jax.Array, res: float) -> jax.Array:
+    """Downscale->upscale loss for res < 1 (factor-of-2 pooling approx)."""
+    if res >= 0.999:
+        return frames
+    k = 2 if res > 0.6 else 4 if res > 0.3 else 8
+    small = _avg_pool(frames, k)
+    return jnp.kron(small, jnp.ones((1, k, k), frames.dtype))[:, :frames.shape[1], :frames.shape[2]]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def encode_segment(cfg: CodecConfig, frames: jax.Array, roi_pixels: jax.Array,
+                   bitrate_kbps: jax.Array, res: jax.Array, key: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Simulate encode+decode.  frames (N,H,W) already ROI-masked (or full).
+    Returns (decoded frames (N,H,W), size_bytes scalar)."""
+    N = frames.shape[0]
+    pix = roi_pixels * res * res * (1.0 + cfg.temporal_rho * (N - 1))
+    bits = bitrate_kbps * 1000.0 * cfg.slot_seconds
+    bpp = bits / jnp.maximum(pix, 1.0)
+
+    # resolution loss branches (static unroll over the small resolution set)
+    def blur_for(r):
+        return _resolution_blur(frames, r)
+    outs = jnp.stack([blur_for(r) for r in cfg.resolutions])
+    ridx = jnp.argmin(jnp.abs(jnp.array(cfg.resolutions) - res))
+    x = outs[ridx]
+
+    # quantization: step shrinks as bpp grows
+    levels = jnp.clip(cfg.quant_scale * bpp, 4.0, 256.0)
+    x = jnp.round(x * levels) / levels
+    # additive coding noise
+    sigma = cfg.sigma0 * jnp.exp(-bpp / cfg.beta)
+    x = x + sigma * jax.random.normal(key, x.shape)
+    size_bytes = bits / 8.0
+    return jnp.clip(x, 0.0, 1.0), size_bytes
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def encode_segment_crf(cfg: CodecConfig, frames: jax.Array,
+                       roi_pixels: jax.Array, key: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """CRF ('constant quality') mode: fixed bpp, content-proportional size."""
+    N = frames.shape[0]
+    pix = roi_pixels * (1.0 + cfg.temporal_rho * (N - 1))
+    bpp = jnp.asarray(cfg.crf_bpp, jnp.float32)
+    levels = jnp.clip(cfg.quant_scale * bpp, 4.0, 256.0)
+    x = jnp.round(frames * levels) / levels
+    sigma = cfg.sigma0 * jnp.exp(-bpp / cfg.beta)
+    x = x + sigma * jax.random.normal(key, x.shape)
+    return jnp.clip(x, 0.0, 1.0), pix * bpp / 8.0

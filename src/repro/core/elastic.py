@@ -1,0 +1,95 @@
+"""Elastic Transmission Mechanism (paper section 5.3).
+
+Thresholds:
+  * tau_a  (online): EMA of total ROI area  a_hat(t) = alpha*a + (1-alpha)*a_hat
+    plus gamma_a * running sigma_a  (section 5.3.1a);
+  * tau_wl / tau_wh (offline): from the profiling set, per bitrate option, the
+    std of accuracy deltas vs the highest bitrate picks the "needs more time"
+    (std > sigma_high -> tau_wl = sum_i b_i) and "can give back time"
+    (std < sigma_low -> tau_wh) bitrate sums (section 5.3.1b).
+
+Adjustment (section 5.3.2): when a(t) > tau_a and W(t) < tau_wl, borrow
+D = gamma_wl * (tau_wl - W(t)) * T of extra transmission (delaying the next
+slot), bounded by a budget; when W(t) >= tau_wh, repay by finishing early.
+The Bandwidth Allocation constraint becomes sum_i b_i T <= W T + D.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ElasticConfig:
+    alpha: float = 0.15          # EMA factor on total ROI area
+    gamma_a: float = 0.5         # aggressiveness on the area threshold
+    gamma_wl: float = 0.6        # aggressiveness of time borrowing
+    sigma_high: float = 0.05     # offline accuracy-delta std gates
+    sigma_low: float = 0.01
+    budget_kbits: float = 1500.0 # max outstanding borrowed data (Kbit)
+    slot_seconds: float = 1.0
+
+
+@dataclass(frozen=True)
+class ElasticState:
+    a_ema: float = 0.0
+    a_var: float = 0.0
+    debt_kbits: float = 0.0      # outstanding borrowed data
+    initialized: bool = False
+
+
+def offline_thresholds(cfg: ElasticConfig, acc_table: np.ndarray,
+                       bitrates: np.ndarray) -> Tuple[float, float]:
+    """acc_table: (num_segments, I, J) profiling accuracies per camera/bitrate.
+    Returns (tau_wl, tau_wh) in Kbps (section 5.3.1b)."""
+    n_seg, I, J = acc_table.shape
+    deltas = acc_table - acc_table[:, :, -1:]
+    stds = deltas.std(axis=0).mean(axis=0)      # (J,) mean-over-cameras std
+    need_more = [j for j in range(J) if stds[j] > cfg.sigma_high]
+    can_give = [j for j in range(J) if stds[j] < cfg.sigma_low]
+    tau_wl = float(bitrates[max(need_more)] * I) if need_more else float(bitrates[0] * I)
+    tau_wh = float(bitrates[min(can_give)] * I) if can_give else float(bitrates[-1] * I)
+    return tau_wl, tau_wh
+
+
+def update(cfg: ElasticConfig, state: ElasticState, total_area: float,
+           W_kbps: float, tau_wl: float, tau_wh: float
+           ) -> Tuple[ElasticState, float, dict]:
+    """One slot.  Returns (new_state, extra_capacity_kbits, log).
+
+    extra_capacity_kbits: additional data volume the allocator may schedule
+    this slot (the +D term); negative values model early slot finish (repay).
+    """
+    if not state.initialized:
+        st = ElasticState(a_ema=total_area, a_var=0.0, debt_kbits=0.0,
+                          initialized=True)
+        return st, 0.0, {"tau_a": np.inf, "borrowed": 0.0, "repaid": 0.0}
+
+    # online area threshold from the *previous* statistics
+    sigma_a = np.sqrt(max(state.a_var, 1e-12))
+    tau_a = state.a_ema + cfg.gamma_a * sigma_a
+
+    borrowed = 0.0
+    repaid = 0.0
+    debt = state.debt_kbits
+    if total_area > tau_a and W_kbps < tau_wl:
+        headroom = cfg.budget_kbits - debt
+        borrowed = min(cfg.gamma_wl * (tau_wl - W_kbps) * cfg.slot_seconds,
+                       max(headroom, 0.0))
+        debt += borrowed
+    elif W_kbps >= tau_wh and debt > 0.0:
+        # finish early: give back up to the surplus above tau_wh
+        repaid = min(debt, (W_kbps - tau_wh) * cfg.slot_seconds)
+        debt -= repaid
+
+    # EMA/variance update (Welford-style on the EMA residual)
+    delta = total_area - state.a_ema
+    a_ema = state.a_ema + cfg.alpha * delta
+    a_var = (1 - cfg.alpha) * (state.a_var + cfg.alpha * delta * delta)
+    new_state = ElasticState(a_ema=a_ema, a_var=a_var, debt_kbits=debt,
+                             initialized=True)
+    extra = borrowed - repaid
+    return new_state, extra, {"tau_a": tau_a, "borrowed": borrowed,
+                              "repaid": repaid, "debt": debt}

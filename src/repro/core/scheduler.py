@@ -1,0 +1,280 @@
+"""DeepStream end-to-end control loop + baselines (paper sections 3-5, Fig. 1).
+
+Per time slot:
+  camera side: ROIDet -> (ROI mask, a_i, c_i); masked ("cropped") encode at
+  the assigned (b_i, r_i).
+  server side: elastic adjustment -> bandwidth allocation (utility-MLP + DP
+  knapsack) -> decode -> server detector -> per-camera F1; slot utility =
+  sum_i lambda_i F1_i.
+
+Baselines (section 7.2):
+  * reducto  — on-camera frame filtering (low-level feature deltas) + fair
+               equal-share bitrates, full frames, detections reused for
+               filtered frames;
+  * jcab     — joint config adaptation + bandwidth allocation with a
+               content-AGNOSTIC profiled utility (no ROI cropping, no (a,c));
+  * static   — fixed equal share;
+  * deepstream_no_elastic — ablation of section 5.3.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import allocation as alloc
+from repro.core import codec as codec_mod
+from repro.core import elastic as elastic_mod
+from repro.core import roidet as roidet_mod
+from repro.core import utility as util_mod
+from repro.core.codec import CodecConfig
+from repro.core.elastic import ElasticConfig, ElasticState
+from repro.data.synthetic import MultiCameraScene, SceneConfig
+from repro.models import detector as det
+
+
+@dataclass
+class SystemConfig:
+    scene: SceneConfig = field(default_factory=SceneConfig)
+    codec: CodecConfig = field(default_factory=CodecConfig)
+    elastic: ElasticConfig = field(default_factory=ElasticConfig)
+    block_size: int = 8
+    weights: Optional[np.ndarray] = None      # lambda_i (default: ones)
+    eval_frames: int = 4                      # frames scored per segment
+    use_kernels: bool = True
+
+    def lam(self) -> np.ndarray:
+        if self.weights is None:
+            return np.ones(self.scene.num_cameras, np.float64)
+        return np.asarray(self.weights, np.float64)
+
+
+class DeepStreamSystem:
+    def __init__(self, cfg: SystemConfig, light_params: Any, server_params: Any,
+                 mlp_params: Any = None):
+        self.cfg = cfg
+        self.light = light_params
+        self.server = server_params
+        self.mlp = mlp_params
+        self.tau_wl: float = 0.0
+        self.tau_wh: float = float("inf")
+        self.jcab_table: Optional[np.ndarray] = None   # (J, R) content-agnostic F1
+        self._key = jax.random.PRNGKey(1234)
+        self.timers: Dict[str, List[float]] = {}
+
+    # -- small utilities ------------------------------------------------------
+
+    def _nextkey(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _t(self, name: str, t0: float) -> None:
+        self.timers.setdefault(name, []).append(time.perf_counter() - t0)
+
+    # -- camera side -----------------------------------------------------------
+
+    def camera_features(self, frames_c: np.ndarray):
+        """frames_c (C, N, H, W) -> ROIResult batch (vmapped)."""
+        t0 = time.perf_counter()
+        res = roidet_mod.roidet_fleet(
+            jnp.asarray(frames_c), self.light, block_size=self.cfg.block_size,
+            use_kernel=self.cfg.use_kernels)
+        jax.block_until_ready(res.mask)
+        self._t("roidet", t0)
+        return res
+
+    # -- server-side evaluation -------------------------------------------------
+
+    def detect_f1(self, decoded: jax.Array, gt_frames: List[List[Tuple]],
+                  reuse_dets: Optional[Tuple] = None) -> float:
+        """decoded (N,H,W); gt per frame.  Scores cfg.eval_frames frames."""
+        n = decoded.shape[0]
+        idxs = np.linspace(0, n - 1, min(self.cfg.eval_frames, n)).astype(int)
+        t0 = time.perf_counter()
+        if reuse_dets is None:
+            grid = det.forward(self.server, decoded[idxs])
+            boxes, scores, valid = det.decode_boxes(grid, conf_thresh=0.4)
+            boxes, valid = np.asarray(boxes), np.asarray(valid)
+        else:
+            boxes, valid = reuse_dets
+            boxes = np.repeat(boxes[None], len(idxs), 0)
+            valid = np.repeat(valid[None], len(idxs), 0)
+        self._t("server", t0)
+        f1s = [det.f1_score(boxes[i], valid[i], gt_frames[j])
+               for i, j in enumerate(idxs)]
+        return float(np.mean(f1s))
+
+    def encode_eval(self, frames: np.ndarray, gt: List[List[Tuple]],
+                    mask: Optional[jax.Array], b: float, r: float
+                    ) -> Tuple[float, float]:
+        """Encode one camera's segment (optionally ROI-masked) and score F1.
+        Returns (f1, size_bytes)."""
+        fr = jnp.asarray(frames)
+        H, W = fr.shape[-2:]
+        if mask is not None:
+            t0 = time.perf_counter()
+            fr = roidet_mod.crop_to_mask(fr, mask, self.cfg.block_size)
+            roi_pixels = float(jnp.sum(mask)) * self.cfg.block_size ** 2
+            self._t("crop", t0)
+        else:
+            roi_pixels = float(H * W)
+        t0 = time.perf_counter()
+        decoded, size = codec_mod.encode_segment(
+            self.cfg.codec, fr, jnp.float32(roi_pixels), jnp.float32(b),
+            jnp.float32(r), self._nextkey())
+        jax.block_until_ready(decoded)
+        self._t("compress", t0)
+        f1 = self.detect_f1(decoded, gt)
+        return f1, float(size)
+
+    # -- offline profiling (section 5.1 + 5.3.1b) --------------------------------
+
+    def profile(self, scene: MultiCameraScene, num_slots: int = 10,
+                mlp_steps: int = 600, seed: int = 0) -> Dict:
+        cfgc = self.cfg.codec
+        feats, tgts = [], []
+        C = self.cfg.scene.num_cameras
+        J = len(cfgc.bitrates_kbps)
+        acc_table = np.zeros((num_slots, C, J), np.float32)
+        jcab_acc = np.zeros((num_slots, C, J, len(cfgc.resolutions)), np.float32)
+        for t in range(num_slots):
+            seg = scene.segment()
+            roi = self.camera_features(seg["frames"])
+            for i in range(C):
+                a_i = float(roi.area_ratio[i])
+                c_i = float(roi.confidence[i])
+                for j, b in enumerate(cfgc.bitrates_kbps):
+                    best = 0.0
+                    for k, r in enumerate(cfgc.resolutions):
+                        f1, _ = self.encode_eval(
+                            seg["frames"][i], seg["boxes"][i], roi.mask[i], b, r)
+                        feats.append((a_i, c_i, float(b), float(r)))
+                        tgts.append(f1)
+                        best = max(best, f1)
+                        # content-agnostic (JCAB) profiling: full frames
+                        f1_full, _ = self.encode_eval(
+                            seg["frames"][i], seg["boxes"][i], None, b, r)
+                        jcab_acc[t, i, j, k] = f1_full
+                    acc_table[t, i, j] = best
+        mlp = util_mod.init_utility_mlp(jax.random.PRNGKey(seed))
+        self.mlp, mse = util_mod.fit(mlp, np.array(feats), np.array(tgts),
+                                     steps=mlp_steps)
+        self.tau_wl, self.tau_wh = elastic_mod.offline_thresholds(
+            self.cfg.elastic, acc_table, np.asarray(cfgc.bitrates_kbps))
+        self.jcab_table = jcab_acc.mean(axis=(0, 1))          # (J, R)
+        return {"mlp_mse": mse, "tau_wl": self.tau_wl, "tau_wh": self.tau_wh,
+                "num_samples": len(tgts)}
+
+    # -- online loop -------------------------------------------------------------
+
+    def run(self, scene: MultiCameraScene, trace_kbps: np.ndarray,
+            method: str = "deepstream", use_elastic: Optional[bool] = None
+            ) -> Dict[str, np.ndarray]:
+        cfgc = self.cfg.codec
+        lam = self.cfg.lam()
+        C = self.cfg.scene.num_cameras
+        bitrates = list(cfgc.bitrates_kbps)
+        if use_elastic is None:
+            use_elastic = method == "deepstream"
+        est = ElasticState()
+        logs = {k: [] for k in ("utility", "mean_f1", "bytes", "W", "extra",
+                                "alloc_kbps", "area")}
+        prev_dets: List[Optional[Tuple]] = [None] * C
+
+        for t in range(len(trace_kbps)):
+            W_t = float(trace_kbps[t])
+            seg = scene.segment()
+            frames, gts = seg["frames"], seg["boxes"]
+
+            if method in ("deepstream", "deepstream_no_elastic"):
+                roi = self.camera_features(frames)
+                a = np.asarray(roi.area_ratio)
+                c = np.asarray(roi.confidence)
+                extra = 0.0
+                if use_elastic:
+                    est, extra_kbits, _ = elastic_mod.update(
+                        self.cfg.elastic, est, float(a.sum()), W_t,
+                        self.tau_wl, self.tau_wh)
+                    extra = extra_kbits / cfgc.slot_seconds   # Kbps-equivalent
+                t0 = time.perf_counter()
+                util, best_res = alloc.build_utility_table(
+                    self.mlp, a, c, bitrates, cfgc.resolutions, lam)
+                al = alloc.allocate_dp(util, best_res, bitrates,
+                                       max(W_t + extra, bitrates[0]),
+                                       use_kernel=self.cfg.use_kernels)
+                self._t("alloc", t0)
+                f1s, sizes = [], []
+                for i in range(C):
+                    f1, size = self.encode_eval(frames[i], gts[i], roi.mask[i],
+                                                al.bitrates_kbps[i],
+                                                al.resolutions[i])
+                    f1s.append(f1); sizes.append(size)
+                logs["extra"].append(extra)
+                logs["area"].append(float(a.sum()))
+                logs["alloc_kbps"].append(al.bitrates_kbps.sum())
+
+            elif method == "jcab":
+                # content-agnostic table: same for every camera, weighted
+                jt = self.jcab_table                          # (J, R)
+                util = np.repeat(jt.max(-1)[None], C, 0) * lam[:, None]
+                best_res = np.repeat(
+                    np.asarray(cfgc.resolutions, np.float32)[jt.argmax(-1)][None], C, 0)
+                al = alloc.allocate_dp(util.astype(np.float32), best_res,
+                                       bitrates, W_t,
+                                       use_kernel=self.cfg.use_kernels)
+                f1s, sizes = [], []
+                for i in range(C):
+                    f1, size = self.encode_eval(frames[i], gts[i], None,
+                                                al.bitrates_kbps[i],
+                                                al.resolutions[i])
+                    f1s.append(f1); sizes.append(size)
+                logs["extra"].append(0.0); logs["area"].append(0.0)
+                logs["alloc_kbps"].append(al.bitrates_kbps.sum())
+
+            elif method in ("reducto", "static"):
+                bs = alloc.allocate_fair(bitrates, W_t, C)
+                f1s, sizes = [], []
+                for i in range(C):
+                    fr = frames[i]
+                    if method == "reducto":
+                        # low-level-feature frame filtering (edge diff)
+                        from repro.kernels.edge_motion import ops as em_ops
+                        sc = em_ops.segment_motion(
+                            jnp.asarray(fr), block_size=self.cfg.block_size,
+                            use_kernel=self.cfg.use_kernels)
+                        keep = np.concatenate(
+                            [[True], np.asarray(sc.sum((1, 2))) > 25.0])
+                        kept = fr[keep]
+                        changed = bool(keep[1:].any())
+                        f1, size = self.encode_eval(kept, [g for g, k in
+                                                           zip(gts[i], keep) if k],
+                                                    None, bs[i], 1.0)
+                        # filtered frames reuse previous detections
+                        grid = det.forward(self.server, jnp.asarray(kept[-1:]))
+                        b_, s_, v_ = det.decode_boxes(grid, conf_thresh=0.4)
+                        prev_dets[i] = (np.asarray(b_[0]), np.asarray(v_[0]))
+                        if not all(keep):
+                            miss_idx = [j for j, k in enumerate(keep) if not k]
+                            f1_re = self.detect_f1(
+                                jnp.asarray(fr), [gts[i][j] for j in miss_idx],
+                                reuse_dets=prev_dets[i])
+                            w_keep = keep.mean()
+                            f1 = f1 * w_keep + f1_re * (1 - w_keep)
+                    else:
+                        f1, size = self.encode_eval(fr, gts[i], None, bs[i], 1.0)
+                    f1s.append(f1); sizes.append(size)
+                logs["extra"].append(0.0); logs["area"].append(0.0)
+                logs["alloc_kbps"].append(float(np.sum(bs)))
+            else:
+                raise ValueError(method)
+
+            logs["utility"].append(float(np.dot(lam, f1s)))
+            logs["mean_f1"].append(float(np.mean(f1s)))
+            logs["bytes"].append(float(np.sum(sizes)))
+            logs["W"].append(W_t)
+
+        return {k: np.asarray(v) for k, v in logs.items()}

@@ -1,0 +1,75 @@
+"""Utility-function profiling (paper section 5.1).
+
+alpha_hat_i = f_i(a_i, c_i, b_i, r_i): ROI-area ratio, on-camera confidence,
+bitrate, resolution -> predicted detection accuracy.  The paper uses a small
+fully-connected regression network trained on an offline profiling set
+(first 80s of each stream at the highest quality); we use 2 hidden layers of
+32 with a sigmoid output, trained with the framework's own AdamW.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import OptimizerConfig
+from repro.common.params import ParamDef, init_params
+from repro.train.optimizer import adamw_update, init_opt_state
+
+HIDDEN = 32
+
+
+def utility_mlp_defs() -> Dict[str, Any]:
+    return {
+        "w1": ParamDef((4, HIDDEN), (None, None), "normal", jnp.float32, scale=2.0),
+        "b1": ParamDef((HIDDEN,), (None,), "zeros"),
+        "w2": ParamDef((HIDDEN, HIDDEN), (None, None), "normal", jnp.float32, scale=2.0),
+        "b2": ParamDef((HIDDEN,), (None,), "zeros"),
+        "w3": ParamDef((HIDDEN, 1), (None, None), "normal", jnp.float32, scale=2.0),
+        "b3": ParamDef((1,), (None,), "zeros"),
+    }
+
+
+def init_utility_mlp(key: jax.Array) -> Any:
+    return init_params(key, utility_mlp_defs())
+
+
+def _featurize(a, c, b_kbps, r) -> jax.Array:
+    """Normalize inputs to comparable scales (log-bitrate)."""
+    return jnp.stack([a, c, jnp.log(b_kbps / 50.0) / 3.5, r], axis=-1)
+
+
+def predict(params, a, c, b_kbps, r) -> jax.Array:
+    x = _featurize(jnp.asarray(a, jnp.float32), jnp.asarray(c, jnp.float32),
+                   jnp.asarray(b_kbps, jnp.float32), jnp.asarray(r, jnp.float32))
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return jax.nn.sigmoid(h @ params["w3"] + params["b3"])[..., 0]
+
+
+def fit(params, features: np.ndarray, targets: np.ndarray, *,
+        steps: int = 800, lr: float = 3e-3, seed: int = 0) -> Tuple[Any, float]:
+    """features: (n, 4) raw (a, c, b_kbps, r); targets: (n,) measured F1."""
+    feats = jnp.asarray(features, jnp.float32)
+    tgts = jnp.asarray(targets, jnp.float32)
+    opt_cfg = OptimizerConfig(lr=lr, warmup_steps=20, total_steps=steps,
+                              weight_decay=1e-4, grad_clip=1.0)
+    opt = init_opt_state(opt_cfg, params)
+
+    def loss_fn(p):
+        pred = predict(p, feats[:, 0], feats[:, 1], feats[:, 2], feats[:, 3])
+        return jnp.mean((pred - tgts) ** 2)
+
+    @jax.jit
+    def step(p, o):
+        l, g = jax.value_and_grad(loss_fn)(p)
+        p, o, _ = adamw_update(opt_cfg, p, g, o)
+        return p, o, l
+
+    loss = None
+    for _ in range(steps):
+        params, opt, loss = step(params, opt)
+    return params, float(loss)

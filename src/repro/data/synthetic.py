@@ -1,0 +1,193 @@
+"""Synthetic correlated multi-camera traffic scenes.
+
+The AI-City dataset used by the paper is not available offline; per the
+repro brief we simulate the data gate with a generator that preserves the
+*properties the paper's mechanisms exploit*:
+
+  * static cameras: fixed per-camera background texture;
+  * moving objects ("vehicles"): rectangles with linear motion + jitter,
+    entering/leaving the scene — so ROI area varies over time;
+  * stationary objects: parked rectangles that motion cannot find
+    (exercises the detector half of ROIDet);
+  * **spatio-temporal correlation** (paper section 2.1): the same world
+    objects appear in several co-located cameras with per-camera view
+    offsets and small time lags, so total ROI area fluctuates
+    *synchronously* across cameras — the property the Elastic Transmission
+    Mechanism exploits;
+  * ground-truth boxes for F1 scoring.
+
+Frames are float32 grayscale in [0,1], (H, W).  Everything is
+deterministic given the seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SceneConfig:
+    num_cameras: int = 5
+    height: int = 96
+    width: int = 160
+    fps: int = 10
+    seg_seconds: float = 1.0           # paper: T = 1s, 10 frames/segment
+    max_objects: int = 8               # concurrent world objects cap
+    spawn_rate: float = 0.35           # new objects per world-step (poisson)
+    mean_speed: float = 3.0            # px / frame
+    obj_size_range: Tuple[int, int] = (8, 26)
+    num_stationary: int = 2            # parked objects per camera
+    view_jitter: float = 6.0           # per-camera view offset scale (px)
+    cam_lag_frames: int = 2            # max per-camera time lag
+    noise_std: float = 0.02
+    seed: int = 0
+
+    @property
+    def frames_per_segment(self) -> int:
+        return int(self.fps * self.seg_seconds)
+
+
+@dataclass
+class WorldObject:
+    x: float; y: float; vx: float; vy: float
+    w: int; h: int; val: float; ttl: int
+
+
+class MultiCameraScene:
+    """Streaming generator: ``segment(t)`` -> frames + ground truth."""
+
+    def __init__(self, cfg: SceneConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        c = cfg
+        # per-camera static background texture (smooth noise)
+        self.backgrounds = []
+        for i in range(c.num_cameras):
+            base = self.rng.uniform(0.25, 0.55, (c.height // 8, c.width // 8))
+            bg = np.kron(base, np.ones((8, 8)))[:c.height, :c.width]
+            self.backgrounds.append(bg.astype(np.float32))
+        # per-camera view transform (translation) + time lag
+        self.offsets = [(self.rng.uniform(-c.view_jitter, c.view_jitter),
+                         self.rng.uniform(-c.view_jitter, c.view_jitter))
+                        for _ in range(c.num_cameras)]
+        self.lags = [int(self.rng.integers(0, c.cam_lag_frames + 1))
+                     for _ in range(c.num_cameras)]
+        # stationary ("parked") objects per camera
+        self.stationary: List[List[Tuple[int, int, int, int, float]]] = []
+        for i in range(c.num_cameras):
+            objs = []
+            for _ in range(c.num_stationary):
+                w = int(self.rng.integers(*c.obj_size_range))
+                h = int(self.rng.integers(*c.obj_size_range))
+                x = int(self.rng.integers(0, c.width - w))
+                y = int(self.rng.integers(0, c.height - h))
+                objs.append((x, y, w, h, float(self.rng.uniform(0.7, 0.95))))
+            self.stationary.append(objs)
+        self.objects: List[WorldObject] = []
+        self._frame_idx = 0
+        self._phase0 = float(self.rng.uniform(0, 2 * np.pi))
+        self._history: List[List[WorldObject]] = []  # world state per frame
+
+    # -- world dynamics ------------------------------------------------------
+
+    def _step_world(self) -> None:
+        c = self.cfg
+        for o in self.objects:
+            o.x += o.vx + self.rng.normal(0, 0.3)
+            o.y += o.vy + self.rng.normal(0, 0.3)
+            o.ttl -= 1
+        self.objects = [o for o in self.objects
+                        if o.ttl > 0 and -40 < o.x < c.width + 40 and -40 < o.y < c.height + 40]
+        # traffic waves: busy/quiet periods so ROI area (and therefore the
+        # content features) genuinely fluctuates — the correlation the
+        # elastic mechanism and content-aware allocation exploit
+        phase = 2 * np.pi * self._frame_idx / 120.0
+        activity = max(0.05, 1.0 + 1.2 * np.sin(phase + self._phase0))
+        n_new = self.rng.poisson(c.spawn_rate * activity)
+        for _ in range(n_new):
+            if len(self.objects) >= c.max_objects:
+                break
+            side = self.rng.integers(0, 2)
+            speed = max(0.5, self.rng.normal(c.mean_speed, 1.0))
+            if side == 0:   # left -> right
+                x, vx = -20.0, speed
+            else:           # right -> left
+                x, vx = float(c.width + 20), -speed
+            y = float(self.rng.uniform(0.15, 0.85) * c.height)
+            self.objects.append(WorldObject(
+                x=x, y=y, vx=vx, vy=float(self.rng.normal(0, 0.2)),
+                w=int(self.rng.integers(*c.obj_size_range)),
+                h=int(self.rng.integers(*c.obj_size_range)),
+                val=float(self.rng.uniform(0.6, 1.0)),
+                ttl=int(self.rng.integers(60, 240))))
+        self._history.append([dataclasses.replace(o) for o in self.objects])
+        self._frame_idx += 1
+
+    # -- rendering ------------------------------------------------------------
+
+    def _render(self, cam: int, world: List[WorldObject]
+                ) -> Tuple[np.ndarray, List[Tuple[int, int, int, int]]]:
+        c = self.cfg
+        ox, oy = self.offsets[cam]
+        frame = self.backgrounds[cam].copy()
+        boxes: List[Tuple[int, int, int, int]] = []
+        for (x, y, w, h, v) in self.stationary[cam]:
+            frame[y:y + h, x:x + w] = v
+            boxes.append((x, y, x + w, y + h))
+        for o in world:
+            x0 = int(round(o.x + ox)); y0 = int(round(o.y + oy))
+            x1, y1 = x0 + o.w, y0 + o.h
+            cx0, cy0 = max(0, x0), max(0, y0)
+            cx1, cy1 = min(c.width, x1), min(c.height, y1)
+            if cx1 - cx0 < 3 or cy1 - cy0 < 3:
+                continue
+            frame[cy0:cy1, cx0:cx1] = o.val
+            # simple "windshield" texture so objects have edges inside
+            frame[cy0 + (cy1 - cy0) // 3: cy0 + (cy1 - cy0) // 2, cx0:cx1] = o.val * 0.6
+            boxes.append((cx0, cy0, cx1, cy1))
+        noisy = frame + self.rng.normal(0, c.noise_std, frame.shape)
+        return np.clip(noisy, 0, 1).astype(np.float32), boxes
+
+    def segment(self) -> Dict:
+        """Advance one time slot; return frames + GT for all cameras.
+
+        Returns {"frames": (C, N, H, W) float32, "boxes": [cam][frame] list,
+                 "t": slot index}.
+        """
+        c = self.cfg
+        n = c.frames_per_segment
+        for _ in range(n):
+            self._step_world()
+        frames = np.zeros((c.num_cameras, n, c.height, c.width), np.float32)
+        boxes: List[List[List[Tuple[int, int, int, int]]]] = []
+        for cam in range(c.num_cameras):
+            cam_boxes = []
+            for f in range(n):
+                idx = max(0, self._frame_idx - n + f - self.lags[cam])
+                idx = min(idx, len(self._history) - 1)
+                frame, bxs = self._render(cam, self._history[idx])
+                frames[cam, f] = frame
+                cam_boxes.append(bxs)
+            boxes.append(cam_boxes)
+        return {"frames": frames, "boxes": boxes,
+                "t": self._frame_idx // n - 1}
+
+
+def bandwidth_trace(kind: str, num_slots: int, seed: int = 0) -> np.ndarray:
+    """FCC-like traces with the paper's means/stds (Kbps):
+    low 521/230, medium 1134/499, high 2305/1397 (section 7.1)."""
+    params = {"low": (521.0, 230.0), "medium": (1134.0, 499.0),
+              "high": (2305.0, 1397.0)}
+    mu, sd = params[kind]
+    rng = np.random.default_rng(seed + hash(kind) % 1000)
+    # AR(1) for realistic temporal correlation, matched mean/std
+    rho = 0.8
+    eps = rng.normal(0, sd * np.sqrt(1 - rho ** 2), num_slots)
+    x = np.empty(num_slots)
+    x[0] = mu + rng.normal(0, sd)
+    for t in range(1, num_slots):
+        x[t] = mu + rho * (x[t - 1] - mu) + eps[t]
+    return np.clip(x, 64.0, None)

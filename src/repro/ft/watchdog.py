@@ -1,0 +1,126 @@
+"""Straggler / failure detection for pod-scale training.
+
+The detector reuses the *same statistical machinery as the paper's elastic
+thresholds* (EMA + sigma gating, section 5.3.1a): a step-time EWMA with
+variance tracking flags steps slower than ema + gamma*sigma as straggler
+events; sustained violations escalate to `replace` (in production: cordon
+the host, restore-from-checkpoint on a respare).  A SimulatedFleet drives
+tests without hardware.
+
+Also here: the preemption-aware checkpoint policy (save every N steps, save
+NOW on SIGTERM) used by launch/train.py.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class WatchdogConfig:
+    alpha: float = 0.1            # EWMA factor (same form as elastic tau_a)
+    gamma: float = 3.0            # sigma multiplier for the straggler gate
+    warmup_steps: int = 5         # ignore compile/first-step outliers
+    escalate_after: int = 3       # consecutive violations -> "replace"
+
+
+@dataclass
+class StepStats:
+    ema: float = 0.0
+    var: float = 0.0
+    count: int = 0
+    violations: int = 0
+    events: List[Dict] = field(default_factory=list)
+
+
+class Watchdog:
+    def __init__(self, cfg: WatchdogConfig = WatchdogConfig()):
+        self.cfg = cfg
+        self.stats = StepStats()
+
+    def record(self, step: int, step_time: float) -> str:
+        """Returns 'ok' | 'straggler' | 'replace'."""
+        s, c = self.stats, self.cfg
+        s.count += 1
+        if s.count <= c.warmup_steps:
+            if s.count == 1:
+                s.ema = step_time
+            else:
+                s.ema = s.ema + c.alpha * (step_time - s.ema)
+            return "ok"
+        sigma = float(np.sqrt(max(s.var, 1e-12)))
+        threshold = s.ema + c.gamma * max(sigma, 0.05 * s.ema)
+        status = "ok"
+        if step_time > threshold:
+            s.violations += 1
+            status = "replace" if s.violations >= c.escalate_after else "straggler"
+            s.events.append({"step": step, "t": step_time,
+                             "threshold": threshold, "status": status})
+        else:
+            s.violations = 0
+            # only healthy steps update the baseline (else stragglers poison it)
+            delta = step_time - s.ema
+            s.ema += c.alpha * delta
+            s.var = (1 - c.alpha) * (s.var + c.alpha * delta * delta)
+        return status
+
+
+class PreemptionCheckpointer:
+    """Save every N steps + immediately on SIGTERM (spot/preemption notice)."""
+
+    def __init__(self, save_fn: Callable[[int], None], every: int = 100,
+                 install_signal: bool = True):
+        self.save_fn = save_fn
+        self.every = every
+        self.preempted = False
+        self.last_saved = -1
+        if install_signal:
+            try:
+                signal.signal(signal.SIGTERM, self._on_sigterm)
+            except ValueError:
+                pass  # not on main thread (tests)
+
+    def _on_sigterm(self, signum, frame):
+        self.preempted = True
+
+    def maybe_save(self, step: int) -> bool:
+        if self.preempted or (step % self.every == 0 and step != self.last_saved):
+            self.save_fn(step)
+            self.last_saved = step
+            if self.preempted:
+                raise SystemExit(143)
+            return True
+        return False
+
+
+class SimulatedFleet:
+    """Test harness: N workers with injectable slow/dead nodes."""
+
+    def __init__(self, n: int, base_step_time: float = 0.1, seed: int = 0):
+        self.n = n
+        self.base = base_step_time
+        self.rng = np.random.default_rng(seed)
+        self.slow: Dict[int, float] = {}
+        self.dead: set = set()
+
+    def inject_straggler(self, worker: int, factor: float = 5.0) -> None:
+        self.slow[worker] = factor
+
+    def kill(self, worker: int) -> None:
+        self.dead.add(worker)
+
+    def step_times(self) -> np.ndarray:
+        t = self.base * (1 + 0.05 * self.rng.standard_normal(self.n))
+        for w, f in self.slow.items():
+            t[w] *= f
+        for w in self.dead:
+            t[w] = np.inf
+        return t
+
+    def synchronous_step_time(self) -> float:
+        """SPMD training runs at the speed of the slowest live worker."""
+        return float(np.max(self.step_times()))

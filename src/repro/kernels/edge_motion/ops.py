@@ -1,0 +1,40 @@
+"""jit'd wrapper: tiling + halo construction + kernel/oracle dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_motion import ref
+from repro.kernels.edge_motion.edge_motion import edge_motion_pallas
+
+# On this CPU container kernels run in interpret mode; on TPU set False.
+INTERPRET = True
+
+
+def _make_tiles(frames: jax.Array, tile_rows: int) -> jax.Array:
+    """frames (N, H, W) -> (N, T, TH+2, W+2) edge-padded overlapping bands."""
+    N, H, W = frames.shape
+    assert H % tile_rows == 0, (H, tile_rows)
+    x = jnp.pad(frames, ((0, 0), (1, 1), (1, 1)), mode="edge")  # (N, H+2, W+2)
+    T = H // tile_rows
+    tiles = [x[:, i * tile_rows:i * tile_rows + tile_rows + 2, :] for i in range(T)]
+    return jnp.stack(tiles, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "tile_rows", "use_kernel", "edge_thresh"))
+def segment_motion(frames: jax.Array, *, block_size: int = 8,
+                   edge_thresh: float = 0.35, tile_rows: int = 32,
+                   use_kernel: bool = True) -> jax.Array:
+    """frames (N, H, W) float32 -> (N-1, H/bs, W/bs) block motion scores."""
+    N, H, W = frames.shape
+    tile_rows = min(tile_rows, H)
+    if not use_kernel:
+        return ref.segment_motion_ref(frames, block_size=block_size,
+                                      edge_thresh=edge_thresh)
+    tiles = _make_tiles(frames, tile_rows)                       # (N,T,TH+2,W+2)
+    out = edge_motion_pallas(tiles[:-1], tiles[1:], block_size=block_size,
+                             edge_thresh=edge_thresh, interpret=INTERPRET)
+    P, T, th_b, w_b = out.shape
+    return out.transpose(0, 1, 2, 3).reshape(P, T * th_b, w_b)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the fused edge+motion kernel (Algorithm 1, lines 3-9).
+
+Semantics (per consecutive frame pair):
+  1. Sobel gradient magnitude^2 on each frame (3x3 stencil, edge-replicated
+     borders) -> binary edge map  e = (|grad|^2 > edge_thresh^2).
+     (The paper uses Canny; we use Sobel-magnitude thresholding because only
+     *edge differences* are consumed downstream — NMS/hysteresis would be
+     discarded by the block-sum anyway.  Documented in DESIGN.md.)
+  2. Edge difference Delta-e = e1 XOR e0.
+  3. Partition into (bs x bs) blocks, sum within each block.
+
+Returns per-block motion scores; thresholding into the binary matrix D
+happens in the caller (repro.core.roidet).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sobel_mag2(frame: jax.Array) -> jax.Array:
+    """frame (H, W) float32 -> squared Sobel gradient magnitude (H, W)."""
+    x = jnp.pad(frame, 1, mode="edge")
+    tl = x[:-2, :-2]; tc = x[:-2, 1:-1]; tr = x[:-2, 2:]
+    ml = x[1:-1, :-2]; mr = x[1:-1, 2:]
+    bl = x[2:, :-2]; bc = x[2:, 1:-1]; br = x[2:, 2:]
+    gx = (tr + 2.0 * mr + br) - (tl + 2.0 * ml + bl)
+    gy = (bl + 2.0 * bc + br) - (tl + 2.0 * tc + tr)
+    return gx * gx + gy * gy
+
+
+def edge_map(frame: jax.Array, edge_thresh: float) -> jax.Array:
+    return sobel_mag2(frame) > (edge_thresh * edge_thresh)
+
+
+def block_motion_ref(f0: jax.Array, f1: jax.Array, *, block_size: int,
+                     edge_thresh: float = 0.35) -> jax.Array:
+    """(H, W) x2 -> (H/bs, W/bs) float32 block motion scores."""
+    H, W = f0.shape
+    bs = block_size
+    assert H % bs == 0 and W % bs == 0, (H, W, bs)
+    e0 = edge_map(f0, edge_thresh)
+    e1 = edge_map(f1, edge_thresh)
+    d = jnp.logical_xor(e0, e1).astype(jnp.float32)
+    return d.reshape(H // bs, bs, W // bs, bs).sum(axis=(1, 3))
+
+
+def segment_motion_ref(frames: jax.Array, *, block_size: int,
+                       edge_thresh: float = 0.35) -> jax.Array:
+    """frames (N, H, W) -> (N-1, H/bs, W/bs): scores per consecutive pair."""
+    return jax.vmap(
+        lambda a, b: block_motion_ref(a, b, block_size=block_size,
+                                      edge_thresh=edge_thresh)
+    )(frames[:-1], frames[1:])

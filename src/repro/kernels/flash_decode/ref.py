@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token GQA decode attention.
+
+q (B, 1, H, hd), k/v (B, S, KV, hd), kv_valid_len scalar -> (B, 1, H, hd).
+Softmax over the valid prefix of the KV cache, fp32 accumulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     kv_valid_len) -> jax.Array:
+    B, _, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(k.shape[1])
+    s = jnp.where(pos[None, None, None, :] < kv_valid_len, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: multiple-choice knapsack DP sweep (section 5.2).
+
+The DP has a true sequential dependency over cameras, but each camera's
+update is a W-wide max-plus over J shifted copies of the value row — pure
+VPU work on a row that stays resident in VMEM for the whole sweep.  The HBM
+traffic is just the (I, J) utility table in and the (I, W+1) choice table
+out; a jnp formulation re-materializes the O(W x J) candidate matrix per
+camera in HBM.
+
+The shift-by-cost_j reads J dynamic slices from a front-NEG-padded VMEM
+scratch row (dynamic_slice on VMEM is a supported Pallas primitive).
+
+Grid: () — one program per allocation problem; fleets batch via vmap
+(DeepStream solves one problem per time slot; a datacenter ingest tier
+solves thousands concurrently).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _dp_kernel(util_ref, cost_ref, vals_ref, choice_ref, vpad_ref, *,
+               num_cams: int, num_opts: int, wp1: int):
+    pad = vpad_ref.shape[0] - wp1                     # static front padding
+    vpad_ref[...] = jnp.where(jnp.arange(vpad_ref.shape[0]) < pad,
+                              NEG, 0.0).astype(jnp.float32)
+
+    def cam_body(i, _):
+        u_row = util_ref[i]                            # (J,)
+        best = jnp.full((wp1,), NEG, jnp.float32)
+        arg = jnp.zeros((wp1,), jnp.int32)
+        for j in range(num_opts):                      # J static, unrolled
+            c = cost_ref[j]
+            shifted = jax.lax.dynamic_slice(vpad_ref[...], (pad - c,), (wp1,))
+            cand = shifted + u_row[j]
+            take = cand > best
+            best = jnp.where(take, cand, best)
+            arg = jnp.where(take, j, arg)
+        choice_ref[i] = arg
+        vpad_ref[pl.ds(pad, wp1)] = best
+        return 0
+
+    jax.lax.fori_loop(0, num_cams, cam_body, 0)
+    vals_ref[...] = vpad_ref[pl.ds(pad, wp1)]
+
+
+def knapsack_dp_pallas(util: jax.Array, costs: jax.Array, W: int, *,
+                       interpret: bool = True):
+    """util (I, J) fp32, costs (J,) int32, W capacity (grid units).
+    Returns (values (W+1,), choices (I, W+1) int32)."""
+    I, J = util.shape
+    wp1 = W + 1
+    wp1_pad = ((wp1 + 127) // 128) * 128
+    kern = functools.partial(_dp_kernel, num_cams=I, num_opts=J, wp1=wp1_pad)
+    vals, choices = pl.pallas_call(
+        kern,
+        grid=(),
+        in_specs=[pl.BlockSpec(util.shape, lambda: (0, 0)),
+                  pl.BlockSpec(costs.shape, lambda: (0,))],
+        out_specs=[pl.BlockSpec((wp1_pad,), lambda: (0,)),
+                   pl.BlockSpec((I, wp1_pad), lambda: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((wp1_pad,), jnp.float32),
+                   jax.ShapeDtypeStruct((I, wp1_pad), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((2 * wp1_pad,), jnp.float32)],
+        interpret=interpret,
+    )(util, costs.astype(jnp.int32))
+    return vals[:wp1], choices[:, :wp1]

@@ -1,0 +1,35 @@
+"""jit'd wrapper for the knapsack DP: kernel/oracle dispatch + backtracking."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.knapsack_dp import ref
+from repro.kernels.knapsack_dp.knapsack_dp import knapsack_dp_pallas
+
+INTERPRET = True
+
+
+@functools.partial(jax.jit, static_argnames=("W", "use_kernel"))
+def solve_values(util: jax.Array, costs: jax.Array, W: int,
+                 use_kernel: bool = True) -> Tuple[jax.Array, jax.Array]:
+    if use_kernel:
+        return knapsack_dp_pallas(util, costs, W, interpret=INTERPRET)
+    return ref.knapsack_dp_ref(util, costs, W)
+
+
+def solve(util: np.ndarray, costs: np.ndarray, W: int,
+          use_kernel: bool = True) -> Tuple[np.ndarray, float]:
+    """Full solve: DP sweep + backtrack.  Returns (per-camera option index
+    picks (I,), achieved total utility)."""
+    vals, choices = solve_values(jnp.asarray(util, jnp.float32),
+                                 jnp.asarray(costs, jnp.int32), int(W),
+                                 use_kernel)
+    picks, _ = ref.backtrack(np.asarray(choices), np.asarray(costs),
+                             np.asarray(vals))
+    total = float(np.asarray(vals).max())
+    return picks, total

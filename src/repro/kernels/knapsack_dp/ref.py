@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for the bandwidth-allocation knapsack DP (section 5.2).
+
+Problem: maximize sum_i lambda_i * u[i, j_i] subject to sum_i cost[j_i] <= W,
+cost in grid units of d = gcd(bitrates).  Classic multiple-choice knapsack:
+
+  V_0[w] = 0
+  V_i[w] = max_j ( V_{i-1}[w - cost_j] + u[i, j] )        (w >= cost_j)
+
+Complexity O(|I| |B| |W|/d) — exactly the paper's DP.  Returns the final
+value row and the per-camera argmax table for backtracking.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG = -1e30
+
+
+def knapsack_dp_ref(util: jax.Array, costs: jax.Array, W: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """util (I, J) fp32; costs (J,) int32 grid units; W grid capacity.
+    Returns (values (W+1,), choices (I, W+1) int32)."""
+    I, J = util.shape
+    Wp1 = W + 1
+
+    def cam_step(v_prev, u_row):
+        # candidate value for each (w, j): v_prev[w - c_j] + u_row[j]
+        w_idx = jnp.arange(Wp1)[:, None]               # (W+1, 1)
+        src = w_idx - costs[None, :]                   # (W+1, J)
+        valid = src >= 0
+        gathered = v_prev[jnp.clip(src, 0)]            # (W+1, J)
+        cand = jnp.where(valid, gathered + u_row[None, :], NEG)
+        v_new = jnp.max(cand, axis=1)
+        choice = jnp.argmax(cand, axis=1).astype(jnp.int32)
+        return v_new, choice
+
+    v0 = jnp.zeros((Wp1,), jnp.float32)
+    v_fin, choices = jax.lax.scan(cam_step, v0, util)
+    return v_fin, choices
+
+
+def backtrack(choices: np.ndarray, costs: np.ndarray, values: np.ndarray
+              ) -> Tuple[np.ndarray, int]:
+    """Recover per-camera option indices from the choice table."""
+    choices = np.asarray(choices)
+    costs = np.asarray(costs)
+    I = choices.shape[0]
+    w = int(np.argmax(np.asarray(values)))
+    picks = np.zeros(I, np.int32)
+    for i in range(I - 1, -1, -1):
+        j = int(choices[i, w])
+        picks[i] = j
+        w -= int(costs[j])
+        w = max(w, 0)
+    return picks, int(np.argmax(np.asarray(values)))
+
+
+def exhaustive_oracle(util: np.ndarray, costs: np.ndarray, W: int
+                      ) -> Tuple[np.ndarray, float]:
+    """Brute force over J^I assignments (tests only)."""
+    import itertools
+    util = np.asarray(util); costs = np.asarray(costs)
+    I, J = util.shape
+    best, best_v = None, -np.inf
+    for assign in itertools.product(range(J), repeat=I):
+        c = sum(costs[j] for j in assign)
+        if c > W:
+            continue
+        v = sum(util[i, j] for i, j in enumerate(assign))
+        if v > best_v:
+            best_v, best = v, assign
+    return np.array(best), float(best_v)

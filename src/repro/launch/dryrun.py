@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build abstract inputs (ShapeDtypeStruct, zero allocation),
+jit with explicit in/out shardings on the production mesh, ``.lower()``,
+``.compile()``, and record:
+  * ``compiled.memory_analysis()``  — proves the per-device footprint,
+  * ``compiled.cost_analysis()``    — per-device FLOPs / bytes for roofline,
+  * parsed collective stats from the partitioned HLO text.
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` and feed
+EXPERIMENTS.md section Dry-run / section Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, save_hlo: bool = False) -> dict:
+    import jax
+    from repro.configs import canonical
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell, cell_supported
+    from repro.roofline.analysis import parse_collectives, roofline_terms
+
+    ok, why = cell_supported(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                "status": "skip", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    fn, abs_args, in_sh, out_sh, meta = build_cell(arch, shape, mesh)
+
+    kind = meta.get("kind")
+    donate = {"train": (0, 1), "decode": (2,), "prefill": ()}[kind]
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*abs_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    terms = roofline_terms(cost, coll)
+
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "status": "ok",
+        "meta": meta,
+        "devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+                + mem.output_size_in_bytes + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes,
+        },
+        "cost": {k: v for k, v in cost.items()
+                 if k in ("flops", "bytes accessed", "transcendentals")},
+        "collectives": coll,
+        "roofline": terms,
+        "hlo_bytes": len(hlo),
+    }
+    if save_hlo:
+        ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+        hp = ARTIFACT_DIR / f"{canonical(arch)}__{shape}__{mesh_kind}.hlo.txt"
+        hp.write_text(hlo)
+        result["hlo_path"] = str(hp)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=False)
+    ap.add_argument("--shape", required=False)
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.common.config import SHAPES_BY_NAME
+    from repro.configs import list_archs
+
+    if args.list:
+        for a in list_archs():
+            for s in SHAPES_BY_NAME:
+                print(f"{a} {s}")
+        return
+
+    assert args.arch and args.shape, "--arch and --shape required (or --list)"
+    try:
+        res = run_cell(args.arch, args.shape, args.mesh, save_hlo=args.save_hlo)
+    except Exception as e:
+        res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    from repro.configs import canonical
+    out = Path(args.out) if args.out else (
+        ARTIFACT_DIR / f"{canonical(args.arch)}__{args.shape}__{args.mesh}.json")
+    out.write_text(json.dumps(res, indent=2, default=str))
+    print(json.dumps({k: res[k] for k in ("arch", "shape", "mesh", "status")
+                      if k in res}))
+    if res["status"] == "ok":
+        print("memory_analysis:", json.dumps(res["memory"]))
+        print("cost_analysis:", json.dumps(res["cost"]))
+        print("roofline:", json.dumps(res["roofline"]))
+    elif res["status"] == "error":
+        print(res["error"])
+        print(res["traceback"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Serving driver: continuous-batched decode over a zoo backbone.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke \
+        --requests 6 --slots 4 --prompt-len 24 --max-new 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=64)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, smoke_config
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.models.model import LM
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh() if args.smoke else make_production_mesh()
+    lm = LM(cfg, mesh)
+    params = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        args.prompt_len).astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    with mesh:
+        eng = ServeEngine(lm, params, batch_slots=args.slots,
+                          max_seq=args.max_seq)
+        stats = eng.run(reqs)
+    print({k: round(v, 3) if isinstance(v, float) else v
+           for k, v in stats.items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Abstract input specs (ShapeDtypeStruct) + shardings per (arch, shape cell).
+
+This is the allocation-free stand-in layer the dry-run lowers against:
+weak-type-correct, shardable, no device memory touched.  Modality frontends
+are stubs per the brief — [audio]/[vlm] archs receive precomputed frame/patch
+embeddings here.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import ModelConfig, OptimizerConfig, RunConfig, ShapeCell, SHAPES_BY_NAME
+from repro.configs import canonical, get_config
+from repro.models.model import LM
+from repro.sharding import rules as R
+from repro.train.optimizer import abstract_opt_state
+
+FULL_ATTENTION_ARCHS = {
+    "seamless_m4t_large_v2", "llama3_405b", "qwen1_5_4b", "granite_8b",
+    "yi_34b", "olmoe_1b_7b", "kimi_k2_1t_a32b", "llama_3_2_vision_90b",
+}
+SUBQUADRATIC_ARCHS = {"xlstm_125m", "zamba2_7b"}
+
+
+def cell_supported(arch_id: str, shape_name: str) -> Tuple[bool, str]:
+    a = canonical(arch_id)
+    if shape_name == "long_500k" and a in FULL_ATTENTION_ARCHS:
+        return False, "long_500k skipped: full quadratic attention (see DESIGN.md Arch-applicability)"
+    return True, ""
+
+
+def arch_run_config(arch_id: str, shape_name: str,
+                    mesh_kind: str = "single") -> RunConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch_id)}")
+    cfg: ModelConfig = mod.CONFIG
+    mb = getattr(mod, "MICROBATCHES", {}).get(shape_name, 1)
+    if isinstance(mb, dict):   # per-mesh counts (DP width differs)
+        mb = mb.get(mesh_kind, 1)
+    opt = OptimizerConfig(moment_dtype=getattr(mod, "MOMENT_DTYPE", "float32"))
+    return RunConfig(model=cfg, opt=opt, microbatches=mb)
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+def batch_abstract(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        out = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        return out
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cell.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        out["img_embeds"] = jax.ShapeDtypeStruct((B, cfg.vlm.num_image_tokens, cfg.d_model), dt)
+    if cfg.family == "audio":
+        enc_s = int(S * cfg.encdec.enc_seq_factor)
+        out["enc_embeds"] = jax.ShapeDtypeStruct((B, enc_s, cfg.d_model), dt)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh) -> Dict[str, NamedSharding]:
+    abs_batch = batch_abstract(cfg, cell)
+    out = {}
+    for k, v in abs_batch.items():
+        spec = R.data_spec(mesh, v.shape[0], *([None] * (len(v.shape) - 1)),
+                           policy=cfg.parallelism)
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def decode_extras_abstract(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Extra inputs a decode cell's cache depends on are baked into the cache;
+    vlm/audio decode needs nothing beyond tokens+cache+pos."""
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+def cache_shardings(lm: LM, batch: int, max_seq: int, mesh: Mesh):
+    """Structural sharding for cache trees: batch dim over DP when divisible
+    (else attn seq over 'data'), last divisible feature dim over 'model'."""
+    defs = lm.cache_defs(batch, max_seq)
+    policy = lm.cfg.parallelism
+    ba = R.fit_batch_axes(mesh, batch, policy)
+    ndp = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    nmodel = mesh.shape.get("model", 1) if policy == "2d" else 1
+    batch_part = (ba if len(ba) > 1 else ba[0]) if ba else None
+
+    def one(s: jax.ShapeDtypeStruct):
+        shape = s.shape
+        parts: list = [None] * len(shape)
+        # find batch dim (first == batch after stack dims) and seq dim
+        b_idx = None
+        seq_idx = None
+        for i, d in enumerate(shape):
+            if b_idx is None and d == batch:
+                b_idx = i
+            elif d == max_seq and i > (b_idx if b_idx is not None else -1):
+                seq_idx = i
+        if b_idx is not None and batch_part is not None:
+            parts[b_idx] = batch_part
+        if seq_idx is not None and nmodel > 1 and max_seq % nmodel == 0:
+            # flash-decoding layout: KV sequence sharded over "model" — each
+            # rank scans its cache slice; softmax stats combine via tiny
+            # psums.  16x less cache traffic per chip than feature sharding,
+            # and no head alignment issue (kv_heads < model size).
+            # (EXPERIMENTS section Perf, iteration vision-2)
+            parts[seq_idx] = "model"
+        elif (seq_idx is not None and batch_part is None
+              and max_seq % mesh.shape["data"] == 0):
+            parts[seq_idx] = "data"  # long-context batch=1: seq over data
+        elif seq_idx is None and nmodel > 1:
+            # no seq axis (SSM/mLSTM states): model-shard the last divisible
+            # trailing feature dim
+            for i in range(len(shape) - 1, (b_idx if b_idx is not None else -1), -1):
+                if parts[i] is None and shape[i] % nmodel == 0 and shape[i] >= nmodel:
+                    parts[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, defs)
+
+
+# ---------------------------------------------------------------------------
+# top-level: everything the dry-run needs for one cell
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh):
+    """Returns (fn, abstract_args, in_shardings, out_shardings, meta)."""
+    from repro.train.steps import make_serve_decode, make_serve_prefill, make_train_step
+
+    cell = SHAPES_BY_NAME[shape_name]
+    mesh_kind = "multi" if "pod" in mesh.axis_names else "single"
+    run = arch_run_config(arch_id, shape_name, mesh_kind)
+    cfg = run.model
+    lm = LM(cfg, mesh)
+    pdefs = lm.param_defs()
+    params_abs = jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), pdefs,
+        is_leaf=lambda x: hasattr(x, "logical_axes"))
+    pshard = R.param_shardings(pdefs, mesh, cfg.fsdp_over_pod, cfg.parallelism)
+    meta = {"arch": arch_id, "shape": shape_name, "kind": cell.kind,
+            "microbatches": run.microbatches,
+            "param_count": int(sum(np.prod(x.shape) for x in jax.tree.leaves(params_abs)))}
+
+    if cell.kind == "train":
+        opt_abs = abstract_opt_state(run.opt, params_abs)
+        opt_shard = type(opt_abs)(
+            step=NamedSharding(mesh, P()),
+            m=jax.tree.map(lambda s: s, pshard),
+            v=jax.tree.map(lambda s: s, pshard))
+        b_abs = batch_abstract(cfg, cell)
+        b_shard = batch_shardings(cfg, cell, mesh)
+        fn = make_train_step(lm, run)
+        metrics_shard = None  # let GSPMD choose (replicated scalars)
+        return (fn, (params_abs, opt_abs, b_abs), (pshard, opt_shard, b_shard),
+                (pshard, opt_shard, metrics_shard), meta)
+
+    def _logits_shard(last_dims):
+        vpart = "model" if cfg.parallelism == "2d" else None
+        spec = R.data_spec(mesh, cell.global_batch, None, vpart,
+                           policy=cfg.parallelism)
+        return NamedSharding(mesh, R.safe_spec(
+            (cell.global_batch, 1, cfg.vocab_size), spec, mesh))
+
+    if cell.kind == "prefill":
+        b_abs = batch_abstract(cfg, cell)
+        b_shard = batch_shardings(cfg, cell, mesh)
+        cache_shard = cache_shardings(lm, cell.global_batch, cell.seq_len, mesh)
+        logits_shard = _logits_shard(None)
+        fn = make_serve_prefill(lm, max_seq=cell.seq_len)
+        return (fn, (params_abs, b_abs), (pshard, b_shard),
+                (logits_shard, cache_shard), meta)
+
+    # decode
+    b_abs = batch_abstract(cfg, cell)
+    b_shard = batch_shardings(cfg, cell, mesh)
+    cache_abs = lm.cache_defs(cell.global_batch, cell.seq_len)
+    cache_shard = cache_shardings(lm, cell.global_batch, cell.seq_len, mesh)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+    logits_shard = _logits_shard(None)
+    fn = make_serve_decode(lm)
+    return (fn, (params_abs, b_abs["tokens"], cache_abs, pos_abs),
+            (pshard, b_shard["tokens"], cache_shard, pos_shard),
+            (logits_shard, cache_shard), meta)

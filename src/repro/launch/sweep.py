@@ -1,0 +1,84 @@
+"""Sweep driver: run every (arch x shape x mesh) dry-run cell in an isolated
+subprocess (one XLA compile arena each; survives individual failures).
+
+  PYTHONPATH=src python -m repro.launch.sweep --mesh single
+  PYTHONPATH=src python -m repro.launch.sweep --mesh multi --archs kimi-k2-1t-a32b
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[3]
+ARTIFACT_DIR = REPO / "artifacts" / "dryrun"
+
+
+def run_one(arch: str, shape: str, mesh: str, timeout: int, force: bool) -> dict:
+    from repro.configs import canonical
+    out = ARTIFACT_DIR / f"{canonical(arch)}__{shape}__{mesh}.json"
+    if out.exists() and not force:
+        res = json.loads(out.read_text())
+        if res.get("status") in ("ok", "skip"):
+            return res
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh]
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                              env={**__import__("os").environ, "PYTHONPATH": str(REPO / "src")})
+        if out.exists():
+            return json.loads(out.read_text())
+        return {"arch": arch, "shape": shape, "mesh": mesh, "status": "error",
+                "error": (proc.stderr or proc.stdout)[-2000:]}
+    except subprocess.TimeoutExpired:
+        return {"arch": arch, "shape": shape, "mesh": mesh, "status": "timeout",
+                "error": f"compile exceeded {timeout}s ({time.time()-t0:.0f}s)"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--shapes", nargs="*", default=None)
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.common.config import SHAPES_BY_NAME
+    from repro.configs import list_archs
+
+    archs = args.archs or list_archs()
+    shapes = args.shapes or list(SHAPES_BY_NAME)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                t0 = time.time()
+                res = run_one(arch, shape, mesh, args.timeout, args.force)
+                dt = time.time() - t0
+                status = res.get("status")
+                extra = ""
+                if status == "ok":
+                    peak = res["memory"]["peak_estimate_bytes"] / 1e9
+                    dom = res["roofline"]["bottleneck"]
+                    extra = f"peak={peak:7.1f}GB dom={dom:<12s} frac={res['roofline']['roofline_fraction']:.3f}"
+                elif status in ("error", "timeout"):
+                    extra = str(res.get("error", ""))[:120].replace("\n", " ")
+                print(f"[{mesh}] {arch:24s} {shape:12s} {status:7s} {dt:6.0f}s {extra}",
+                      flush=True)
+                results.append(res)
+
+    n_ok = sum(r.get("status") == "ok" for r in results)
+    n_skip = sum(r.get("status") == "skip" for r in results)
+    n_bad = len(results) - n_ok - n_skip
+    print(f"\nSWEEP DONE: {n_ok} ok, {n_skip} skip, {n_bad} failed / {len(results)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,323 @@
+"""GQA attention with a memory-bounded chunked (flash-style) formulation.
+
+The chunked path is the pure-JAX analogue of flash attention: an outer scan
+over query chunks and an inner scan over KV chunks with an online softmax,
+fp32 accumulators, and O(q_chunk x kv_chunk) live scores.  This is what keeps
+32k-prefill lowering memory-sane (a naive (B,H,S,S) score tensor for a 32k
+sequence would be tens of GB per device).  The Pallas ``flash_decode`` kernel
+in ``repro/kernels`` is the TPU-optimized decode counterpart; this module is
+the reference/GSPMD path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.common.params import ParamDef
+from repro.models.layers import apply_rope, linear, linear_defs
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter declarations
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig, d_model: Optional[int] = None,
+              kv_from: Optional[int] = None) -> Dict[str, Any]:
+    """Self-attention (kv_from=None) or cross-attention (kv_from=d_enc)."""
+    d = d_model if d_model is not None else cfg.d_model
+    dkv = kv_from if kv_from is not None else d
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    qf, kvf = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    b = cfg.qkv_bias
+    return {
+        "q": linear_defs(d, qf, ("embed", "heads"), dt, bias=b, bias_axis="heads"),
+        "k": linear_defs(dkv, kvf, ("embed", "kv_heads"), dt, bias=b, bias_axis="kv_heads"),
+        "v": linear_defs(dkv, kvf, ("embed", "kv_heads"), dt, bias=b, bias_axis="kv_heads"),
+        "o": linear_defs(qf, d, ("heads", "embed"), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention core
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> Tuple[jax.Array, int]:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, q_offset: int = 0,
+                      kv_valid_len: Optional[jax.Array] = None,
+                      q_chunk: int = 512, kv_chunk: int = 2048) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd) -> (B,Sq,H,hd).
+
+    Online-softmax over KV chunks; GQA grouping via a (KV, G) head split.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    q, true_sq = _pad_to(q, 1, qc)
+    k, true_skv = _pad_to(k, 1, kc)
+    v, _ = _pad_to(v, 1, kc)
+    nq, nk = q.shape[1] // qc, k.shape[1] // kc
+
+    # (nq, B, qc, KV, G, hd) / (nk, B, kc, KV, hd)
+    qr = jnp.moveaxis(q.reshape(B, nq, qc, KV, G, hd), 1, 0)
+    kr = jnp.moveaxis(k.reshape(B, nk, kc, KV, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kc, KV, hd), 1, 0)
+
+    valid_len = true_skv if kv_valid_len is None else kv_valid_len
+
+    def outer(_, q_in):
+        qi, iq = q_in                                    # (B,qc,KV,G,hd)
+        q_pos = q_offset + iq * qc + jnp.arange(qc)
+
+        def inner(carry, k_in):
+            m, l, acc = carry
+            ki, vi, ik = k_in
+            kv_pos = ik * kc + jnp.arange(kc)
+            s = jnp.einsum("bqkgd,bskd->bqkgs", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            mask = kv_pos[None, :] < valid_len           # (1,kc) padding mask
+            if causal:
+                mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqkgs,bskd->bqkgd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, qc, KV, G), NEG_INF, jnp.float32),
+                jnp.zeros((B, qc, KV, G), jnp.float32),
+                jnp.zeros((B, qc, KV, G, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(inner, init, (kr, vr, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = jax.lax.scan(outer, None, (qr, jnp.arange(nq)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * qc, H, hd)
+    return out[:, :true_sq]
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     kv_valid_len: jax.Array) -> jax.Array:
+    """Single-position attention: q (B,1,H,hd), k/v (B,S,KV,hd).
+
+    Score/combine matmuls run in the cache dtype with fp32 ACCUMULATION
+    (MXU-native) rather than casting the whole KV cache to fp32 — an fp32
+    cache copy doubles decode's HBM traffic (EXPERIMENTS section Perf,
+    iteration vision-1).  Softmax stays fp32."""
+    B, _, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd).astype(k.dtype)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k.shape[1])
+    s = jnp.where(pos[None, None, None, :] < kv_valid_len, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def decode_attention_with_new(q: jax.Array, k: jax.Array, v: jax.Array,
+                              k1: jax.Array, v1: jax.Array, *,
+                              kv_valid_len: jax.Array) -> jax.Array:
+    """Decode attention over old cache (< kv_valid_len) plus one fresh
+    (k1, v1) token, without materializing the updated cache.
+    q (B,1,H,hd); k/v (B,S,KV,hd); k1/v1 (B,1,KV,hd)."""
+    B, _, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd).astype(k.dtype)
+    s_old = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k.shape[1])
+    s_old = jnp.where(pos[None, None, None, :] < kv_valid_len, s_old, NEG_INF)
+    s_new = jnp.einsum("bkgd,bskd->bkgs", qg, k1.astype(k.dtype),
+                       preferred_element_type=jnp.float32) * scale  # (B,KV,G,1)
+    m = jnp.maximum(jnp.max(s_old, axis=-1, keepdims=True), s_new)
+    p_old = jnp.exp(s_old - m)
+    p_new = jnp.exp(s_new - m)
+    denom = jnp.sum(p_old, axis=-1, keepdims=True) + p_new
+    out = (jnp.einsum("bkgs,bskd->bkgd", (p_old / denom).astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)
+           + (p_new / denom) * v1.reshape(B, KV, 1, hd).astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def self_attention(cfg: ModelConfig, params, x: jax.Array, *,
+                   positions: Optional[jax.Array] = None, causal: bool = True,
+                   q_chunk: int = 512, kv_chunk: int = 2048) -> jax.Array:
+    """Full-sequence self attention (training / encoder)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = _split_heads(linear(params["q"], x), cfg.num_heads, hd)
+    k = _split_heads(linear(params["k"], x), cfg.num_kv_heads, hd)
+    v = _split_heads(linear(params["v"], x), cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return linear(params["o"], out.reshape(B, S, cfg.num_heads * hd))
+
+
+def cross_attention(cfg: ModelConfig, params, x: jax.Array, kv_src: jax.Array,
+                    *, q_chunk: int = 512, kv_chunk: int = 2048) -> jax.Array:
+    """x attends to kv_src (encoder states / image patch embeddings)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = _split_heads(linear(params["q"], x), cfg.num_heads, hd)
+    k = _split_heads(linear(params["k"], kv_src), cfg.num_kv_heads, hd)
+    v = _split_heads(linear(params["v"], kv_src), cfg.num_kv_heads, hd)
+    out = chunked_attention(q, k, v, causal=False, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return linear(params["o"], out.reshape(B, S, cfg.num_heads * hd))
+
+
+# ---- KV-cache protocol -----------------------------------------------------
+
+def kv_cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    hd = cfg.resolved_head_dim
+    kvf = cfg.num_kv_heads * hd
+    if cfg.kv_cache_dtype == "int8":
+        # quantized cache: int8 values + per-(token, kv-head) bf16 scales
+        # (overhead 2/hd ~ 1.6% of the saved bytes) — EXPERIMENTS Perf v5
+        return {
+            "k": jax.ShapeDtypeStruct((batch, max_seq, kvf), jnp.int8),
+            "v": jax.ShapeDtypeStruct((batch, max_seq, kvf), jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct((batch, max_seq, cfg.num_kv_heads), jnp.bfloat16),
+            "v_scale": jax.ShapeDtypeStruct((batch, max_seq, cfg.num_kv_heads), jnp.bfloat16),
+        }
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_seq, kvf), dt),
+        "v": jax.ShapeDtypeStruct((batch, max_seq, kvf), dt),
+    }
+
+
+def _quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, KV, hd) -> (int8 values, per-(token,head) scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, kv_heads: int,
+                   hd: int, dt) -> jax.Array:
+    """(B, S, kvf) int8 + (B, S, KV) scales -> (B, S, KV, hd) values."""
+    B, S, _ = q.shape
+    x = q.reshape(B, S, kv_heads, hd).astype(dt)
+    return x * scale[..., None].astype(dt)
+
+
+def prefill_self_attention(cfg: ModelConfig, params, x: jax.Array,
+                           max_seq: int, **chunks) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal self-attention over the prompt; returns output + padded cache."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    positions = jnp.arange(S)[None, :]
+    q = _split_heads(linear(params["q"], x), cfg.num_heads, hd)
+    k = _split_heads(linear(params["k"], x), cfg.num_kv_heads, hd)
+    v = _split_heads(linear(params["v"], x), cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=True, **chunks)
+    out = linear(params["o"], out.reshape(B, S, cfg.num_heads * hd))
+    pad = max_seq - S
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        cache = {"k": kq.reshape(B, S, -1), "v": vq.reshape(B, S, -1),
+                 "k_scale": ks, "v_scale": vs}
+    else:
+        cache = {"k": k.reshape(B, S, -1), "v": v.reshape(B, S, -1)}
+    if pad > 0:
+        cache = {kk: jnp.pad(vv, ((0, 0), (0, pad)) + ((0, 0),) * (vv.ndim - 2))
+                 for kk, vv in cache.items()}
+    return out, cache
+
+
+def decode_self_attention_read(cfg: ModelConfig, params, x: jax.Array,
+                               cache: Dict[str, jax.Array], pos: jax.Array,
+                               use_kernel: bool = False
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode that treats the cache as READ-ONLY: attends over the
+    old cache (tokens < pos) plus the fresh token via an online-softmax merge
+    (iteration vision-3), and returns the new (k1, v1) flat tokens for the
+    caller to write in one batched post-scan store (iteration vision-4).
+
+    x (B,1,d); cache k/v (B,S,kvf).  Returns (attn_out, k1 (B,1,kvf), v1)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((B, 1), pos)
+    q = _split_heads(linear(params["q"], x), cfg.num_heads, hd)
+    k1 = _split_heads(linear(params["k"], x), cfg.num_kv_heads, hd)
+    v1 = _split_heads(linear(params["v"], x), cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k1 = apply_rope(k1, positions, cfg.rope_theta)
+    S = cache["k"].shape[1]
+    if cfg.kv_cache_dtype == "int8":
+        dt = jnp.dtype(cfg.dtype)
+        k = _dequantize_kv(cache["k"], cache["k_scale"], cfg.num_kv_heads, hd, dt)
+        v = _dequantize_kv(cache["v"], cache["v_scale"], cfg.num_kv_heads, hd, dt)
+    else:
+        k = cache["k"].reshape(B, S, cfg.num_kv_heads, hd)
+        v = cache["v"].reshape(B, S, cfg.num_kv_heads, hd)
+    if use_kernel:
+        from repro.kernels.flash_decode import ops as fd_ops
+        out = fd_ops.flash_decode_with_new(q, k, v, k1, v1, kv_valid_len=pos)
+    else:
+        out = decode_attention_with_new(q, k, v, k1, v1, kv_valid_len=pos)
+    out = linear(params["o"], out.reshape(B, 1, cfg.num_heads * hd))
+    if cfg.kv_cache_dtype == "int8":
+        k1q, k1s = _quantize_kv(k1)
+        v1q, v1s = _quantize_kv(v1)
+        return out, {"k": k1q.reshape(B, 1, -1), "v": v1q.reshape(B, 1, -1),
+                     "k_scale": k1s, "v_scale": v1s}
+    return out, {"k": k1.reshape(B, 1, -1), "v": v1.reshape(B, 1, -1)}
+
+
+def decode_self_attention(cfg: ModelConfig, params, x: jax.Array,
+                          cache: Dict[str, jax.Array], pos: jax.Array,
+                          use_kernel: bool = False) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Convenience variant returning the updated cache (single-layer users)."""
+    out, new_tok = decode_self_attention_read(cfg, params, x, cache, pos,
+                                              use_kernel)
+    nc = {kk: jax.lax.dynamic_update_slice_in_dim(
+              cache[kk], vv.astype(cache[kk].dtype), pos, axis=1)
+          for kk, vv in new_tok.items()}
+    return out, nc

@@ -1,0 +1,168 @@
+"""Single-scale anchor-free conv detector (YOLOv5-Lite analogue, in JAX).
+
+Two width variants share the code:
+  * ``light``  — the on-camera detector ROIDet runs once per segment
+                 (paper section 4: low confidence threshold, low resolution);
+  * ``server`` — the edge-server model whose F1 is the paper's utility.
+
+Output grid: stride-16 cells, each predicting (objectness, dx, dy, logw, logh).
+Pure functions + ParamDef trees, trained with the framework's own AdamW.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.params import ParamDef, init_params
+
+STRIDE = 16
+
+
+def _conv_def(cin: int, cout: int, k: int = 3) -> ParamDef:
+    return ParamDef((k, k, cin, cout), (None, None, None, None), "normal",
+                    jnp.float32, scale=1.4)
+
+
+def detector_defs(variant: str = "light") -> Dict[str, Any]:
+    widths = {"light": (8, 16, 32, 32), "server": (16, 32, 64, 64)}[variant]
+    c1, c2, c3, c4 = widths
+    return {
+        "c1": _conv_def(1, c1), "b1": ParamDef((c1,), (None,), "zeros"),
+        "c2": _conv_def(c1, c2), "b2": ParamDef((c2,), (None,), "zeros"),
+        "c3": _conv_def(c2, c3), "b3": ParamDef((c3,), (None,), "zeros"),
+        "c4": _conv_def(c3, c4), "b4": ParamDef((c4,), (None,), "zeros"),
+        "head": _conv_def(c4, 5, k=1), "bh": ParamDef((5,), (None,), "zeros"),
+    }
+
+
+def init_detector(key: jax.Array, variant: str = "light") -> Any:
+    return init_params(key, detector_defs(variant))
+
+
+def _conv(x, w, b, stride=2):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+def forward(params, frames: jax.Array) -> jax.Array:
+    """frames: (B, H, W) in [0,1] -> raw grid (B, H/16, W/16, 5)."""
+    x = frames[..., None]
+    x = _conv(x, params["c1"], params["b1"])
+    x = _conv(x, params["c2"], params["b2"])
+    x = _conv(x, params["c3"], params["b3"])
+    x = _conv(x, params["c4"], params["b4"])
+    y = jax.lax.conv_general_dilated(
+        x, params["head"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["bh"]
+    return y
+
+
+def decode_boxes(grid: jax.Array, conf_thresh: float = 0.3, top_k: int = 16
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """grid (B, Gy, Gx, 5) -> boxes (B, K, 4 xyxy), scores (B, K), valid (B, K)."""
+    B, Gy, Gx, _ = grid.shape
+    obj = jax.nn.sigmoid(grid[..., 0])
+    cy = (jnp.arange(Gy)[:, None] + jax.nn.sigmoid(grid[..., 1])) * STRIDE
+    cx = (jnp.arange(Gx)[None, :] + jax.nn.sigmoid(grid[..., 2])) * STRIDE
+    bw = jnp.exp(jnp.clip(grid[..., 3], -4, 4)) * STRIDE
+    bh = jnp.exp(jnp.clip(grid[..., 4], -4, 4)) * STRIDE
+    boxes = jnp.stack([cx - bw / 2, cy - bh / 2, cx + bw / 2, cy + bh / 2], -1)
+    flat_s = obj.reshape(B, -1)
+    flat_b = boxes.reshape(B, -1, 4)
+    k = min(top_k, flat_s.shape[1])
+    scores, idx = jax.lax.top_k(flat_s, k)
+    sel = jnp.take_along_axis(flat_b, idx[..., None], axis=1)
+    valid = scores > conf_thresh
+    # greedy NMS over the K candidates (K small, unrolled)
+    iou = box_iou(sel, sel)                                   # (B,K,K)
+    keep = jnp.ones((B, k), bool)
+    for i in range(1, k):
+        over = (iou[:, i, :i] > 0.45) & keep[:, :i] & valid[:, :i]
+        keep = keep.at[:, i].set(~jnp.any(over, axis=-1))
+    return sel, scores, valid & keep
+
+
+def box_iou(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a (..., Ka, 4), b (..., Kb, 4) -> IoU (..., Ka, Kb)."""
+    ax0, ay0, ax1, ay1 = [a[..., i] for i in range(4)]
+    bx0, by0, bx1, by1 = [b[..., i] for i in range(4)]
+    ix0 = jnp.maximum(ax0[..., :, None], bx0[..., None, :])
+    iy0 = jnp.maximum(ay0[..., :, None], by0[..., None, :])
+    ix1 = jnp.minimum(ax1[..., :, None], bx1[..., None, :])
+    iy1 = jnp.minimum(ay1[..., :, None], by1[..., None, :])
+    iw = jnp.clip(ix1 - ix0, 0)
+    ih = jnp.clip(iy1 - iy0, 0)
+    inter = iw * ih
+    area_a = jnp.clip((ax1 - ax0) * (ay1 - ay0), 0)
+    area_b = jnp.clip((bx1 - bx0) * (by1 - by0), 0)
+    return inter / jnp.maximum(area_a[..., :, None] + area_b[..., None, :] - inter, 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# training targets + loss
+# ---------------------------------------------------------------------------
+
+def encode_targets(boxes: List[Tuple[int, int, int, int]], gy: int, gx: int
+                   ) -> np.ndarray:
+    """GT boxes (xyxy) -> target grid (Gy, Gx, 5) [obj, dy, dx, logw, logh]."""
+    t = np.zeros((gy, gx, 5), np.float32)
+    for (x0, y0, x1, y1) in boxes:
+        cx, cy = (x0 + x1) / 2, (y0 + y1) / 2
+        gxi = int(np.clip(cx // STRIDE, 0, gx - 1))
+        gyi = int(np.clip(cy // STRIDE, 0, gy - 1))
+        t[gyi, gxi, 0] = 1.0
+        t[gyi, gxi, 1] = cy / STRIDE - gyi
+        t[gyi, gxi, 2] = cx / STRIDE - gxi
+        t[gyi, gxi, 3] = np.log(max(x1 - x0, 1) / STRIDE)
+        t[gyi, gxi, 4] = np.log(max(y1 - y0, 1) / STRIDE)
+    return t
+
+
+def detection_loss(params, frames: jax.Array, targets: jax.Array) -> jax.Array:
+    grid = forward(params, frames)
+    obj_t = targets[..., 0]
+    obj_logit = grid[..., 0]
+    bce = jnp.mean(
+        jnp.maximum(obj_logit, 0) - obj_logit * obj_t +
+        jnp.log1p(jnp.exp(-jnp.abs(obj_logit))))
+    # box regression only on positive cells
+    pos = obj_t > 0.5
+    pred_off = jnp.stack([jax.nn.sigmoid(grid[..., 1]), jax.nn.sigmoid(grid[..., 2]),
+                          grid[..., 3], grid[..., 4]], -1)
+    tgt_off = targets[..., 1:]
+    l2 = jnp.sum(jnp.where(pos[..., None], (pred_off - tgt_off) ** 2, 0.0))
+    l2 = l2 / jnp.maximum(jnp.sum(pos), 1.0)
+    return bce * 4.0 + l2
+
+
+# ---------------------------------------------------------------------------
+# F1 metric (the paper's utility)
+# ---------------------------------------------------------------------------
+
+def f1_score(pred_boxes: np.ndarray, pred_valid: np.ndarray,
+             gt_boxes: List[Tuple[int, int, int, int]],
+             iou_thresh: float = 0.3) -> float:
+    """Greedy one-to-one matching F1 for one frame."""
+    preds = [tuple(b) for b, v in zip(np.asarray(pred_boxes), np.asarray(pred_valid)) if v]
+    if not preds and not gt_boxes:
+        return 1.0
+    if not preds or not gt_boxes:
+        return 0.0
+    a = np.array(preds, np.float32)[None]
+    b = np.array(gt_boxes, np.float32)[None]
+    iou = np.asarray(box_iou(jnp.asarray(a), jnp.asarray(b)))[0]
+    matched_gt: set = set()
+    tp = 0
+    for i in np.argsort(-iou.max(axis=1)):
+        j = int(np.argmax(iou[i]))
+        if iou[i, j] >= iou_thresh and j not in matched_gt:
+            matched_gt.add(j)
+            tp += 1
+    prec = tp / len(preds)
+    rec = tp / len(gt_boxes)
+    return 0.0 if tp == 0 else 2 * prec * rec / (prec + rec)

@@ -1,0 +1,163 @@
+"""Shared neural-net layers (functional, ParamDef-declared).
+
+Every layer is a namespace of pure functions:
+  ``defs(cfg, ...)`` -> ParamDef tree,  ``apply(cfg, params, x, ...)`` -> y.
+Weights carry logical axis names so :mod:`repro.sharding.rules` can derive
+PartitionSpecs (TP over "model"-group axes, FSDP over "embed").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.common.params import ParamDef
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(d: int) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((d,), ("norm",), "ones")}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense projections / MLP
+# ---------------------------------------------------------------------------
+
+def linear_defs(d_in: int, d_out: int, axes: Tuple[Optional[str], Optional[str]],
+                dtype, bias: bool = False, bias_axis: Optional[str] = None) -> Dict[str, ParamDef]:
+    out: Dict[str, ParamDef] = {"w": ParamDef((d_in, d_out), axes, "normal", dtype)}
+    if bias:
+        out["b"] = ParamDef((d_out,), (bias_axis,), "zeros", dtype)
+    return out
+
+
+def linear(params, x: jax.Array) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, params["w"])
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def swiglu_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, dt = cfg.d_model, _dt(cfg)
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    return {
+        "up": linear_defs(d, ff, ("embed", "mlp"), dt),
+        "gate": linear_defs(d, ff, ("embed", "mlp"), dt),
+        "down": linear_defs(ff, d, ("mlp", "embed"), dt),
+    }
+
+
+def swiglu(params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(linear(params["gate"], x)) * linear(params["up"], x)
+    return linear(params["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    dt = _dt(cfg)
+    v = cfg.padded_vocab   # padded so the vocab axis TP-shards (Megatron-style)
+    out = {"tok": ParamDef((v, cfg.d_model), ("vocab", "embed"), "embed", dt)}
+    if not cfg.tie_embeddings:
+        out["unembed"] = ParamDef((cfg.d_model, v), ("embed", "vocab"), "normal", dt)
+    return out
+
+
+def embed(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params, x: jax.Array) -> jax.Array:
+    if "unembed" in params:
+        return jnp.einsum("...d,dv->...v", x, params["unembed"])
+    return jnp.einsum("...d,vd->...v", x, params["tok"])
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  logical_vocab: Optional[int] = None) -> jax.Array:
+    """Mean token cross-entropy; vocab axis may be model-sharded (GSPMD keeps
+    the one-hot product sharded; logsumexp reduces with a psum).  Padded vocab
+    rows (>= logical_vocab) are masked out of the partition function."""
+    logits = logits.astype(jnp.float32)
+    if logical_vocab is not None and logical_vocab < logits.shape[-1]:
+        pad_mask = jnp.arange(logits.shape[-1]) >= logical_vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    tgt = jnp.sum(logits * onehot, axis=-1)
+    return jnp.mean(lse - tgt)
+
+
+def chunked_cross_entropy(embed_params, x: jax.Array, labels: jax.Array,
+                          logical_vocab: int, chunk: int) -> jax.Array:
+    """Sequence-chunked unembed+CE: materializes only (B, chunk, V) logits at
+    a time (remat'd), instead of the full (B, S, V) tensor.  This is what
+    makes 256k-vocab training memory-sane (EXPERIMENTS section Perf,
+    iteration seamless-1)."""
+    B, S, d = x.shape
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    nc = x.shape[1] // chunk
+    xs = jnp.moveaxis(x.reshape(B, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    n_valid = jnp.float32(B * S)
+
+    @jax.checkpoint
+    def one(carry, inp):
+        xc, lc, ic = inp
+        logits = unembed(embed_params, xc).astype(jnp.float32)
+        if logical_vocab < logits.shape[-1]:
+            pad_mask = jnp.arange(logits.shape[-1]) >= logical_vocab
+            logits = jnp.where(pad_mask, -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lc, logits.shape[-1], dtype=jnp.float32)
+        tgt = jnp.sum(logits * onehot, axis=-1)
+        valid = (ic * chunk + jnp.arange(chunk))[None, :] < S
+        return carry + jnp.sum(jnp.where(valid, lse - tgt, 0.0)), None
+
+    total, _ = jax.lax.scan(one, jnp.zeros((), jnp.float32),
+                            (xs, ls, jnp.arange(nc)))
+    return total / n_valid

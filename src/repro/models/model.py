@@ -1,0 +1,614 @@
+"""Unified LM wrapper composing family-specific blocks.
+
+One :class:`LM` serves all ten assigned architectures.  Layer stacks are
+*scanned* (``lax.scan`` over stacked parameters) to keep compile time and HLO
+size O(1) in depth; heterogeneous families (vlm / xlstm / zamba2) scan over
+homogeneous *superblocks* (e.g. vlm: 4 self-attn + 1 cross-attn per
+superblock).  Remat is applied per scanned block.
+
+API (all pure functions of params):
+  loss(params, batch)                  -> scalar loss, metrics   (train_4k)
+  prefill(params, batch)               -> last-pos logits, cache (prefill_32k)
+  decode(params, tokens, cache, pos)   -> logits, new cache      (decode_*)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.config import ModelConfig, ShapeCell
+from repro.common.params import ParamDef, init_params, map_defs
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.sharding import rules as R
+
+
+def _stack(defs: Any, n: int) -> Any:
+    return map_defs(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.logical_axes,
+                           d.init, d.dtype, d.scale), defs)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)  # "minimal": save only block inputs
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+
+    # -- construction -------------------------------------------------------
+
+    def _mask_pad(self, logits: jax.Array) -> jax.Array:
+        """Mask padded vocab rows so sampling never emits them."""
+        v = self.cfg.vocab_size
+        if logits.shape[-1] > v:
+            logits = jnp.where(jnp.arange(logits.shape[-1]) >= v, -1e30, logits)
+        return logits
+
+    @staticmethod
+    def _write_cache_tokens(cache_kv, new_tokens, pos: jax.Array):
+        """One batched write of the per-layer new tokens (dict matching the
+        cache structure, incl. int8 scales when quantized) into the stacked
+        (..., B, S, feat) cache — the layer scan itself only READS the cache,
+        so no per-layer double-buffer copy (EXPERIMENTS section Perf,
+        iteration vision-4)."""
+        out = {}
+        for key, buf in cache_kv.items():
+            seq_axis = buf.ndim - 2
+            idx = (jnp.int32(0),) * seq_axis + (pos,) + (jnp.int32(0),) * (
+                buf.ndim - 1 - seq_axis)
+            out[key] = jax.lax.dynamic_update_slice(
+                buf, new_tokens[key].astype(buf.dtype), idx)
+        return out
+
+    def _constrain(self, x: jax.Array) -> jax.Array:
+        if self.mesh is None or x.ndim != 3:
+            return x
+        ba = R.fit_batch_axes(self.mesh, x.shape[0], self.cfg.parallelism)
+        if not ba:
+            return x
+        return R.constrain(x, P(ba if len(ba) > 1 else ba[0], None, None))
+
+    def _block_defs(self, kind: str) -> Any:
+        cfg = self.cfg
+        if kind == "dense":
+            return {"ln1": L.rmsnorm_defs(cfg.d_model), "attn": A.attn_defs(cfg),
+                    "ln2": L.rmsnorm_defs(cfg.d_model), "mlp": L.swiglu_defs(cfg)}
+        if kind == "moe":
+            return {"ln1": L.rmsnorm_defs(cfg.d_model), "attn": A.attn_defs(cfg),
+                    "ln2": L.rmsnorm_defs(cfg.d_model), "moe": MOE.moe_defs(cfg)}
+        if kind == "mamba2":
+            return {"ln": L.rmsnorm_defs(cfg.d_model), "mamba": SSM.mamba2_defs(cfg)}
+        if kind == "mlstm":
+            return {"ln": L.rmsnorm_defs(cfg.d_model), "mlstm": XL.mlstm_defs(cfg)}
+        if kind == "slstm":
+            return {"ln": L.rmsnorm_defs(cfg.d_model), "slstm": XL.slstm_defs(cfg)}
+        if kind == "cross":
+            return {"ln1": L.rmsnorm_defs(cfg.d_model), "xattn": A.attn_defs(cfg),
+                    "ln2": L.rmsnorm_defs(cfg.d_model), "mlp": L.swiglu_defs(cfg),
+                    "gate": ParamDef((1,), (None,), "zeros", jnp.float32)}
+        if kind == "encdec_dec":
+            return {"ln1": L.rmsnorm_defs(cfg.d_model), "attn": A.attn_defs(cfg),
+                    "lnx": L.rmsnorm_defs(cfg.d_model), "xattn": A.attn_defs(cfg),
+                    "ln2": L.rmsnorm_defs(cfg.d_model), "mlp": L.swiglu_defs(cfg)}
+        raise ValueError(kind)
+
+    def _layout(self) -> Dict[str, Any]:
+        """Family layout: how many scanned units of what inner structure."""
+        cfg = self.cfg
+        f = cfg.family
+        if f in ("dense",):
+            return {"main": ("dense", cfg.num_layers)}
+        if f == "moe":
+            return {"main": ("moe", cfg.num_layers)}
+        if f == "ssm":  # xlstm
+            k = cfg.xlstm.slstm_every
+            n_super = cfg.num_layers // k
+            return {"super_ssm": (n_super, k - 1)}  # k-1 mlstm + 1 slstm each
+        if f == "hybrid":  # zamba2
+            k = cfg.shared_attn_every
+            n_super = cfg.num_layers // k
+            tail = cfg.num_layers - n_super * k
+            return {"super_hybrid": (n_super, k - 1), "tail_mamba": tail}
+        if f == "vlm":
+            k = cfg.vlm.cross_attn_every
+            n_super = cfg.num_layers // k
+            return {"super_vlm": (n_super, k - 1)}
+        if f == "audio":
+            return {"enc": cfg.encdec.enc_layers, "dec": cfg.encdec.dec_layers}
+        raise ValueError(f)
+
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        lay = self._layout()
+        out: Dict[str, Any] = {"embed": L.embed_defs(cfg),
+                               "final_norm": L.rmsnorm_defs(cfg.d_model)}
+        if "main" in lay:
+            kind, n = lay["main"]
+            out["blocks"] = _stack(self._block_defs(kind), n)
+        if "super_ssm" in lay:
+            n_super, n_m = lay["super_ssm"]
+            out["blocks"] = _stack(
+                {"mlstm": _stack(self._block_defs("mlstm"), n_m),
+                 "slstm": self._block_defs("slstm")}, n_super)
+        if "super_hybrid" in lay:
+            n_super, n_m = lay["super_hybrid"]
+            out["blocks"] = _stack(_stack(self._block_defs("mamba2"), n_m), n_super)
+            out["shared_attn"] = self._block_defs("dense")
+            if lay["tail_mamba"]:
+                out["tail"] = _stack(self._block_defs("mamba2"), lay["tail_mamba"])
+        if "super_vlm" in lay:
+            n_super, n_s = lay["super_vlm"]
+            out["blocks"] = _stack(
+                {"self": _stack(self._block_defs("dense"), n_s),
+                 "cross": self._block_defs("cross")}, n_super)
+        if "enc" in lay:
+            out["enc_blocks"] = _stack(self._block_defs("dense"), lay["enc"])
+            out["dec_blocks"] = _stack(self._block_defs("encdec_dec"), lay["dec"])
+            out["enc_norm"] = L.rmsnorm_defs(cfg.d_model)
+        return out
+
+    def init(self, key: jax.Array) -> Any:
+        return init_params(key, self.param_defs())
+
+    # -- block applications (full sequence) ---------------------------------
+
+    def _apply_dense(self, p, x, *, causal=True, chunks=None):
+        cfg = self.cfg
+        ch = chunks or {}
+        h = x + A.self_attention(cfg, p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                 causal=causal, **ch)
+        h = self._constrain(h)
+        out = h + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return self._constrain(out)
+
+    def _apply_moe(self, p, x):
+        cfg = self.cfg
+        h = x + A.self_attention(cfg, p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps))
+        h = self._constrain(h)
+        y, stats = MOE.apply_moe(cfg, p["moe"], L.rmsnorm(p["ln2"], h, cfg.norm_eps),
+                                 mesh=self.mesh)
+        return self._constrain(h + y), stats
+
+    def _apply_mamba(self, p, x):
+        cfg = self.cfg
+        return self._constrain(
+            x + SSM.apply_mamba2(cfg, p["mamba"], L.rmsnorm(p["ln"], x, cfg.norm_eps)))
+
+    def _apply_cross(self, p, x, kv_src):
+        cfg = self.cfg
+        g = jnp.tanh(p["gate"]).astype(x.dtype)
+        h = x + g * A.cross_attention(cfg, p["xattn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), kv_src)
+        return self._constrain(
+            h + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps)))
+
+    # -- full-sequence forward (training) ------------------------------------
+
+    def forward(self, params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+        """Returns final hidden states (B,S,d) and aux metrics."""
+        cfg = self.cfg
+        lay = self._layout()
+        x = L.embed(params["embed"], batch["tokens"]).astype(jnp.dtype(cfg.dtype))
+        x = self._constrain(x)
+        aux = {}
+
+        if "main" in lay:
+            kind = lay["main"][0]
+            if kind == "dense":
+                def body(h, p):
+                    return self._apply_dense(p, h), None
+                x, _ = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+            else:  # moe
+                def body(h, p):
+                    h, stats = self._apply_moe(p, h)
+                    return h, stats
+                x, stats = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+                aux["moe_aux_loss"] = jnp.mean(stats["aux_loss"])
+                aux["moe_drop_frac"] = jnp.mean(stats["drop_frac"])
+
+        elif "super_ssm" in lay:
+            def body(h, p):
+                def inner(h2, pm):
+                    return self._constrain(
+                        h2 + XL.apply_mlstm(cfg, pm["mlstm"],
+                                            L.rmsnorm(pm["ln"], h2, cfg.norm_eps))), None
+                h, _ = jax.lax.scan(inner, h, p["mlstm"])
+                h = self._constrain(
+                    h + XL.apply_slstm(cfg, p["slstm"]["slstm"],
+                                       L.rmsnorm(p["slstm"]["ln"], h, cfg.norm_eps)))
+                return h, None
+            x, _ = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+
+        elif "super_hybrid" in lay:
+            shared = params["shared_attn"]
+            def body(h, p):
+                def inner(h2, pm):
+                    return self._apply_mamba(pm, h2), None
+                h, _ = jax.lax.scan(inner, h, p)
+                return self._apply_dense(shared, h), None
+            x, _ = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+            if "tail" in params:
+                def tail_body(h, pm):
+                    return self._apply_mamba(pm, h), None
+                x, _ = jax.lax.scan(_remat(cfg, tail_body), x, params["tail"])
+
+        elif "super_vlm" in lay:
+            kv_src = batch["img_embeds"].astype(jnp.dtype(cfg.dtype))
+            def body(h, p):
+                def inner(h2, ps):
+                    return self._apply_dense(ps, h2), None
+                h, _ = jax.lax.scan(inner, h, p["self"])
+                return self._apply_cross(p["cross"], h, kv_src), None
+            x, _ = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+
+        elif "enc" in lay:
+            enc = batch["enc_embeds"].astype(jnp.dtype(cfg.dtype))
+            def ebody(h, p):
+                return self._apply_dense(p, h, causal=False), None
+            enc, _ = jax.lax.scan(_remat(cfg, ebody), enc, params["enc_blocks"])
+            enc = L.rmsnorm(params["enc_norm"], enc, cfg.norm_eps)
+            def dbody(h, p):
+                h = h + A.self_attention(cfg, p["attn"], L.rmsnorm(p["ln1"], h, cfg.norm_eps))
+                h = h + A.cross_attention(cfg, p["xattn"], L.rmsnorm(p["lnx"], h, cfg.norm_eps), enc)
+                h = h + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps))
+                return self._constrain(h), None
+            x, _ = jax.lax.scan(_remat(cfg, dbody), x, params["dec_blocks"])
+
+        return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+    def logits(self, params, batch) -> Tuple[jax.Array, Dict]:
+        x, aux = self.forward(params, batch)
+        logits = self._mask_pad(L.unembed(params["embed"], x))
+        if (self.mesh is not None and "model" in self.mesh.axis_names
+                and self.cfg.parallelism == "2d"
+                and self.cfg.padded_vocab % self.mesh.shape["model"] == 0):
+            ba = R.fit_batch_axes(self.mesh, logits.shape[0])
+            bspec = (ba if len(ba) > 1 else ba[0]) if ba else None
+            logits = R.constrain(logits, P(bspec, None, "model"))
+        return logits, aux
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        if cfg.loss_chunk > 0:
+            x, aux = self.forward(params, batch)
+            ce = L.chunked_cross_entropy(params["embed"], x, batch["labels"],
+                                         cfg.vocab_size, cfg.loss_chunk)
+        else:
+            logits, aux = self.logits(params, batch)
+            ce = L.cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        total = ce
+        if "moe_aux_loss" in aux:
+            total = total + 0.01 * aux["moe_aux_loss"]
+        aux["ce"] = ce
+        return total, aux
+
+    # -- serving: cache protocol ---------------------------------------------
+
+    def cache_defs(self, batch: int, max_seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        lay = self._layout()
+        out: Dict[str, Any] = {}
+        def stackc(defs, n):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), defs)
+        if "main" in lay:
+            out["blocks"] = stackc(A.kv_cache_defs(cfg, batch, max_seq), lay["main"][1])
+        if "super_ssm" in lay:
+            n_super, n_m = lay["super_ssm"]
+            out["blocks"] = stackc(
+                {"mlstm": stackc(XL.mlstm_init_state(cfg, batch), n_m),
+                 "slstm": XL.slstm_init_state(cfg, batch)}, n_super)
+        if "super_hybrid" in lay:
+            n_super, n_m = lay["super_hybrid"]
+            out["blocks"] = stackc(
+                {"mamba": stackc(SSM.mamba2_cache_defs(cfg, batch), n_m),
+                 "attn": A.kv_cache_defs(cfg, batch, max_seq)}, n_super)
+            if lay["tail_mamba"]:
+                out["tail"] = stackc(SSM.mamba2_cache_defs(cfg, batch), lay["tail_mamba"])
+        if "super_vlm" in lay:
+            n_super, n_s = lay["super_vlm"]
+            xk = cfg.vlm.num_image_tokens
+            kvf = cfg.num_kv_heads * cfg.resolved_head_dim
+            dt = jnp.dtype(cfg.dtype)
+            out["blocks"] = stackc(
+                {"self": stackc(A.kv_cache_defs(cfg, batch, max_seq), n_s),
+                 "cross": {"k": jax.ShapeDtypeStruct((batch, xk, kvf), dt),
+                           "v": jax.ShapeDtypeStruct((batch, xk, kvf), dt)}}, n_super)
+        if "enc" in lay:
+            kvf = cfg.num_kv_heads * cfg.resolved_head_dim
+            dt = jnp.dtype(cfg.dtype)
+            enc_seq = int(max_seq * cfg.encdec.enc_seq_factor)
+            out["dec_blocks"] = stackc(
+                {"self": A.kv_cache_defs(cfg, batch, max_seq),
+                 "cross": {"k": jax.ShapeDtypeStruct((batch, enc_seq, kvf), dt),
+                           "v": jax.ShapeDtypeStruct((batch, enc_seq, kvf), dt)}},
+                lay["dec"])
+        return out
+
+    def init_cache(self, batch: int, max_seq: int) -> Any:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_defs(batch, max_seq))
+
+    def _cross_kv(self, p, kv_src):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        k = L.linear(p["k"], kv_src)
+        v = L.linear(p["v"], kv_src)
+        return {"k": k, "v": v}
+
+    # -- prefill -------------------------------------------------------------
+
+    def prefill(self, params, batch: Dict[str, jax.Array], max_seq: int
+                ) -> Tuple[jax.Array, Any]:
+        """Process the prompt; return last-position logits + filled cache."""
+        cfg = self.cfg
+        lay = self._layout()
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+        x = self._constrain(x)
+
+        if "main" in lay:
+            kind = lay["main"][0]
+            def body(h, p):
+                hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+                a, kv = A.prefill_self_attention(cfg, p["attn"], hn, max_seq)
+                h = self._constrain(h + a)
+                h2 = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+                if kind == "dense":
+                    h = h + L.swiglu(p["mlp"], h2)
+                else:
+                    y, _ = MOE.apply_moe(cfg, p["moe"], h2, mesh=self.mesh)
+                    h = h + y
+                return self._constrain(h), kv
+            x, cache = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+            cache = {"blocks": cache}
+
+        elif "super_ssm" in lay:
+            def body(h, p):
+                def inner(h2, pm):
+                    hn = L.rmsnorm(pm["ln"], h2, cfg.norm_eps)
+                    q, k, v, i_raw, f_raw, z = XL._mlstm_qkvg(cfg, pm["mlstm"], hn)
+                    hh, (C, n, m) = XL._mlstm_chunkwise(
+                        q, k, v, i_raw, f_raw, XL._zeros_state(cfg, B),
+                        chunk=cfg.xlstm.chunk_size)
+                    y = hh.reshape(B, S, -1).astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+                    h2 = h2 + L.linear({"w": pm["mlstm"]["down"]}, y.astype(h2.dtype))
+                    return self._constrain(h2), {"C": C, "n": n, "m": m}
+                h, mc = jax.lax.scan(inner, h, p["mlstm"])
+                hn = L.rmsnorm(p["slstm"]["ln"], h, cfg.norm_eps)
+                wx = L.linear({"w": p["slstm"]["slstm"]["w"]}, hn)
+                zero = tuple(jnp.zeros((B, cfg.d_model), jnp.float32) for _ in range(4))
+                hs, (c, n2, hh2, m2) = XL._slstm_scan(cfg, p["slstm"]["slstm"], wx, zero)
+                h = self._constrain(
+                    h + L.linear({"w": p["slstm"]["slstm"]["out"]}, hs.astype(h.dtype)))
+                return h, {"mlstm": mc, "slstm": {"c": c, "n": n2, "h": hh2, "m": m2}}
+            x, cache = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+            cache = {"blocks": cache}
+
+        elif "super_hybrid" in lay:
+            shared = params["shared_attn"]
+            def body(h, p):
+                def inner(h2, pm):
+                    hn = L.rmsnorm(pm["ln"], h2, cfg.norm_eps)
+                    d_in, H, Pd, N = SSM._dims(cfg)
+                    z, xs, Bm, Cm, dt, Am = SSM._proj_split(cfg, pm["mamba"], hn)
+                    xs2 = xs.reshape(B, S, H, Pd)
+                    y, s_fin = SSM.ssd_chunked(xs2, Bm, Cm, dt, Am, chunk=cfg.ssm.chunk_size)
+                    y = y + pm["mamba"]["D"][None, None, :, None] * xs2.astype(jnp.float32)
+                    y = y.reshape(B, S, d_in) * jax.nn.silu(z.astype(jnp.float32))
+                    h2 = h2 + L.linear({"w": pm["mamba"]["out_proj"]}, y.astype(h2.dtype))
+                    # conv tail for decode continuation
+                    zx = L.linear({"w": pm["mamba"]["in_proj"]}, hn)
+                    xbc = zx[..., d_in:2 * d_in + 2 * N]
+                    K = cfg.ssm.conv_width
+                    conv_tail = xbc[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+                        xbc, ((0, 0), (K - 1 - S, 0), (0, 0)))
+                    return self._constrain(h2), {"state": s_fin, "conv": conv_tail.astype(jnp.dtype(cfg.dtype))}
+                h, mc = jax.lax.scan(inner, h, p)
+                hn = L.rmsnorm(shared["ln1"], h, cfg.norm_eps)
+                a, kv = A.prefill_self_attention(cfg, shared["attn"], hn, max_seq)
+                h = self._constrain(h + a)
+                h = h + L.swiglu(shared["mlp"], L.rmsnorm(shared["ln2"], h, cfg.norm_eps))
+                return self._constrain(h), {"mamba": mc, "attn": kv}
+            x, cache = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+            cache = {"blocks": cache}
+            if "tail" in params:
+                def one_tail(h, pm):
+                    hn = L.rmsnorm(pm["ln"], h, cfg.norm_eps)
+                    d_in, H, Pd, N = SSM._dims(cfg)
+                    z, xs, Bm, Cm, dt, Am = SSM._proj_split(cfg, pm["mamba"], hn)
+                    xs2 = xs.reshape(B, S, H, Pd)
+                    y, s_fin = SSM.ssd_chunked(xs2, Bm, Cm, dt, Am, chunk=cfg.ssm.chunk_size)
+                    y = y + pm["mamba"]["D"][None, None, :, None] * xs2.astype(jnp.float32)
+                    y = y.reshape(B, S, d_in) * jax.nn.silu(z.astype(jnp.float32))
+                    h = h + L.linear({"w": pm["mamba"]["out_proj"]}, y.astype(h.dtype))
+                    zx = L.linear({"w": pm["mamba"]["in_proj"]}, hn)
+                    xbc = zx[..., d_in:2 * d_in + 2 * N]
+                    K = cfg.ssm.conv_width
+                    conv_tail = xbc[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+                        xbc, ((0, 0), (K - 1 - S, 0), (0, 0)))
+                    return self._constrain(h), {"state": s_fin, "conv": conv_tail.astype(jnp.dtype(cfg.dtype))}
+                x, tc = jax.lax.scan(lambda h, pm: one_tail(h, pm), x, params["tail"])
+                cache["tail"] = tc
+
+        elif "super_vlm" in lay:
+            kv_src = batch["img_embeds"].astype(jnp.dtype(cfg.dtype))
+            def body(h, p):
+                def inner(h2, ps):
+                    hn = L.rmsnorm(ps["ln1"], h2, cfg.norm_eps)
+                    a, kv = A.prefill_self_attention(cfg, ps["attn"], hn, max_seq)
+                    h2 = self._constrain(h2 + a)
+                    h2 = h2 + L.swiglu(ps["mlp"], L.rmsnorm(ps["ln2"], h2, cfg.norm_eps))
+                    return self._constrain(h2), kv
+                h, kvs = jax.lax.scan(inner, h, p["self"])
+                pc = p["cross"]
+                g = jnp.tanh(pc["gate"]).astype(h.dtype)
+                hn = L.rmsnorm(pc["ln1"], h, cfg.norm_eps)
+                h = h + g * A.cross_attention(cfg, pc["xattn"], hn, kv_src)
+                h = h + L.swiglu(pc["mlp"], L.rmsnorm(pc["ln2"], h, cfg.norm_eps))
+                xkv = self._cross_kv(pc["xattn"], kv_src)
+                return self._constrain(h), {"self": kvs, "cross": xkv}
+            x, cache = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+            cache = {"blocks": cache}
+
+        elif "enc" in lay:
+            enc = batch["enc_embeds"].astype(jnp.dtype(cfg.dtype))
+            def ebody(h, p):
+                return self._apply_dense(p, h, causal=False), None
+            enc, _ = jax.lax.scan(_remat(cfg, ebody), enc, params["enc_blocks"])
+            enc = L.rmsnorm(params["enc_norm"], enc, cfg.norm_eps)
+            def dbody(h, p):
+                hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+                a, kv = A.prefill_self_attention(cfg, p["attn"], hn, max_seq)
+                h = self._constrain(h + a)
+                h = h + A.cross_attention(cfg, p["xattn"], L.rmsnorm(p["lnx"], h, cfg.norm_eps), enc)
+                h = h + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps))
+                xkv = self._cross_kv(p["xattn"], enc)
+                return self._constrain(h), {"self": kv, "cross": xkv}
+            x, cache = jax.lax.scan(_remat(cfg, dbody), x, params["dec_blocks"])
+            cache = {"dec_blocks": cache}
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._mask_pad(L.unembed(params["embed"], x[:, -1:]))
+        return logits, cache
+
+    # -- decode ---------------------------------------------------------------
+
+    def decode(self, params, tokens: jax.Array, cache: Any, pos: jax.Array
+               ) -> Tuple[jax.Array, Any]:
+        """One decode step: tokens (B,1) int32; pos scalar int32."""
+        cfg = self.cfg
+        lay = self._layout()
+        B = tokens.shape[0]
+        x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+        if "main" in lay:
+            kind = lay["main"][0]
+            def body(h, pc):
+                p, c = pc
+                hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+                a, ntok = A.decode_self_attention_read(cfg, p["attn"], hn, c, pos)
+                h = h + a
+                h2 = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+                if kind == "dense":
+                    h = h + L.swiglu(p["mlp"], h2)
+                else:
+                    y, _ = MOE.apply_moe(cfg, p["moe"], h2, mesh=self.mesh)
+                    h = h + y
+                return h, ntok
+            x, ntoks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+            new_cache = {"blocks": self._write_cache_tokens(cache["blocks"], ntoks, pos)}
+
+        elif "super_ssm" in lay:
+            def body(h, pc):
+                p, c = pc
+                def inner(h2, pmc):
+                    pm, cm = pmc
+                    hn = L.rmsnorm(pm["ln"], h2, cfg.norm_eps)
+                    y, cm2 = XL.decode_mlstm(cfg, pm["mlstm"], hn, cm)
+                    return h2 + y, cm2
+                h, mc = jax.lax.scan(inner, h, (p["mlstm"], c["mlstm"]))
+                hn = L.rmsnorm(p["slstm"]["ln"], h, cfg.norm_eps)
+                y, sc = XL.decode_slstm(cfg, p["slstm"]["slstm"], hn, c["slstm"])
+                return h + y, {"mlstm": mc, "slstm": sc}
+            x, nc = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+            new_cache = {"blocks": nc}
+
+        elif "super_hybrid" in lay:
+            shared = params["shared_attn"]
+            def body(h, pc):
+                p, c = pc
+                def inner(h2, pmc):
+                    pm, cm = pmc
+                    hn = L.rmsnorm(pm["ln"], h2, cfg.norm_eps)
+                    y, cm2 = SSM.decode_mamba2(cfg, pm["mamba"], hn, cm)
+                    return h2 + y, cm2
+                h, mc = jax.lax.scan(inner, h, (p, c["mamba"]))
+                hn = L.rmsnorm(shared["ln1"], h, cfg.norm_eps)
+                a, ntok = A.decode_self_attention_read(cfg, shared["attn"], hn, c["attn"], pos)
+                h = h + a
+                h = h + L.swiglu(shared["mlp"], L.rmsnorm(shared["ln2"], h, cfg.norm_eps))
+                return h, {"mamba": mc, "attn": ntok}
+            x, nc = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+            new_cache = {"blocks": {
+                "mamba": nc["mamba"],
+                "attn": self._write_cache_tokens(
+                    cache["blocks"]["attn"], nc["attn"], pos)}}
+            if "tail" in params:
+                def tbody(h, pmc):
+                    pm, cm = pmc
+                    hn = L.rmsnorm(pm["ln"], h, cfg.norm_eps)
+                    y, cm2 = SSM.decode_mamba2(cfg, pm["mamba"], hn, cm)
+                    return h + y, cm2
+                x, tc = jax.lax.scan(tbody, x, (params["tail"], cache["tail"]))
+                new_cache["tail"] = tc
+
+        elif "super_vlm" in lay:
+            def body(h, pc):
+                p, c = pc
+                def inner(h2, psc):
+                    ps, cs = psc
+                    hn = L.rmsnorm(ps["ln1"], h2, cfg.norm_eps)
+                    a, ntok = A.decode_self_attention_read(cfg, ps["attn"], hn, cs, pos)
+                    h2 = h2 + a
+                    h2 = h2 + L.swiglu(ps["mlp"], L.rmsnorm(ps["ln2"], h2, cfg.norm_eps))
+                    return h2, ntok
+                h, kvs = jax.lax.scan(inner, h, (p["self"], c["self"]))
+                pcr = p["cross"]
+                g = jnp.tanh(pcr["gate"]).astype(h.dtype)
+                hn = L.rmsnorm(pcr["ln1"], h, cfg.norm_eps)
+                hd = cfg.resolved_head_dim
+                q = A._split_heads(L.linear(pcr["xattn"]["q"], hn), cfg.num_heads, hd)
+                kk = c["cross"]["k"].reshape(B, -1, cfg.num_kv_heads, hd)
+                vv = c["cross"]["v"].reshape(B, -1, cfg.num_kv_heads, hd)
+                a = A.decode_attention(q, kk, vv, kv_valid_len=jnp.int32(kk.shape[1]))
+                a = L.linear(pcr["xattn"]["o"], a.reshape(B, 1, -1))
+                h = h + g * a
+                h = h + L.swiglu(pcr["mlp"], L.rmsnorm(pcr["ln2"], h, cfg.norm_eps))
+                return h, {"self": kvs, "cross": c["cross"]}
+            x, nc = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+            new_cache = {"blocks": {
+                "self": self._write_cache_tokens(
+                    cache["blocks"]["self"], nc["self"], pos),
+                "cross": nc["cross"]}}
+
+        elif "enc" in lay:
+            def body(h, pc):
+                p, c = pc
+                hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+                a, ntok = A.decode_self_attention_read(cfg, p["attn"], hn, c["self"], pos)
+                h = h + a
+                hn = L.rmsnorm(p["lnx"], h, cfg.norm_eps)
+                hd = cfg.resolved_head_dim
+                q = A._split_heads(L.linear(p["xattn"]["q"], hn), cfg.num_heads, hd)
+                kk = c["cross"]["k"].reshape(B, -1, cfg.num_kv_heads, hd)
+                vv = c["cross"]["v"].reshape(B, -1, cfg.num_kv_heads, hd)
+                a = A.decode_attention(q, kk, vv, kv_valid_len=jnp.int32(kk.shape[1]))
+                h = h + L.linear(p["xattn"]["o"], a.reshape(B, 1, -1))
+                h = h + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps))
+                return h, {"self": ntok, "cross": c["cross"]}
+            x, nc = jax.lax.scan(body, x, (params["dec_blocks"], cache["dec_blocks"]))
+            new_cache = {"dec_blocks": {
+                "self": self._write_cache_tokens(
+                    cache["dec_blocks"]["self"], nc["self"], pos),
+                "cross": nc["cross"]}}
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._mask_pad(L.unembed(params["embed"], x))
+        return logits, new_cache

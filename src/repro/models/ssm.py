@@ -1,0 +1,171 @@
+"""Mamba2 (SSD) block — chunked parallel training form + recurrent decode.
+
+Implements the minimal SSD algorithm (Dao & Gu, 2024): scalar-per-head decay
+A, per-step dt, shared B/C projections (n_groups=1), causal depthwise conv on
+the SSM input, gated output.  The chunked form keeps the quadratic term at
+O(chunk^2) and carries an (H, N, P) state across chunks with a ``lax.scan`` —
+TPU-friendly: all chunk-local work is batched einsums on the MXU.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.common.params import ParamDef
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return d_in, n_heads, s.head_dim, s.state_size
+
+
+def mamba2_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    s = cfg.ssm
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    d_in, H, Pd, N = _dims(cfg)
+    # in_proj emits [z (d_in), x (d_in), B (N), C (N), dt (H)]
+    d_proj = 2 * d_in + 2 * N + H
+    return {
+        "in_proj": ParamDef((d, d_proj), ("embed", "mlp"), "normal", dt),
+        "conv_w": ParamDef((s.conv_width, d_in + 2 * N), ("conv", None), "normal", dt, scale=0.5),
+        "A_log": ParamDef((H,), ("state",), "zeros", jnp.float32),
+        "D": ParamDef((H,), ("state",), "ones", jnp.float32),
+        "dt_bias": ParamDef((H,), ("state",), "zeros", jnp.float32),
+        "out_proj": ParamDef((d_in, d), ("mlp", "embed"), "normal", dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., Q) -> (..., Q, Q) lower-triangular pairwise sums."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _proj_split(cfg: ModelConfig, params, x: jax.Array):
+    d_in, H, Pd, N = _dims(cfg)
+    zxbcdt = L.linear({"w": params["in_proj"]}, x)
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    xbc = _causal_conv(xbc, params["conv_w"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                     # (H,)
+    return z, xs, Bm, Cm, dt, A
+
+
+def ssd_chunked(xs, Bm, Cm, dt, A, *, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD. xs (B,S,H,P); Bm/Cm (B,S,N); dt (B,S,H); A (H,).
+    Returns y (B,S,H,P) fp32 and final state (B,H,N,P)."""
+    B, S, H, Pd = xs.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = xs.shape[1] // chunk
+    Q = chunk
+    xs = xs.reshape(B, nc, Q, H, Pd)
+    Bm = Bm.reshape(B, nc, Q, N)
+    Cm = Cm.reshape(B, nc, Q, N)
+    dt = dt.reshape(B, nc, Q, H)
+    dA = dt * A                                                  # (B,nc,Q,H)
+    dA_cs = jnp.cumsum(dA, axis=2)                               # within-chunk
+    # diagonal (within-chunk) term
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))            # (B,nc,H,Q,Q)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cm, Bm)                   # (B,nc,Q,Q)
+    xdt = xs * dt[..., None]                                     # (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", CB,
+                        jnp.moveaxis(Lmat, 2, 2), xdt)
+    # chunk-final states
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)          # (B,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bm, dt * decay_to_end, xs)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                    # (B,nc,H)
+    s0 = (jnp.zeros((B, H, N, Pd), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        st_c, dec_c = inp                                        # (B,H,N,P),(B,H)
+        s_out = s                                                # state entering chunk
+        s = s * dec_c[..., None, None] + st_c
+        return s, s_out
+
+    (s_fin, s_in) = jax.lax.scan(step, s0,
+                                 (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+                                  jnp.moveaxis(chunk_decay, 1, 0)))
+    s_in = jnp.moveaxis(s_in, 0, 1)                              # (B,nc,H,N,P)
+    decay_from_start = jnp.exp(dA_cs)                            # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cm, decay_from_start, s_in)
+    y = (y_diag + y_off).reshape(B, nc * Q, H, Pd)
+    return y[:, :S], s_fin
+
+
+def apply_mamba2(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    """Training / prefill-style full-sequence pass. x: (B,S,d)."""
+    d_in, H, Pd, N = _dims(cfg)
+    B, S, _ = x.shape
+    z, xs, Bm, Cm, dt, A = _proj_split(cfg, params, x)
+    xs = xs.reshape(B, S, H, Pd)
+    y, _ = ssd_chunked(xs, Bm, Cm, dt, A, chunk=cfg.ssm.chunk_size)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_in) * jax.nn.silu(z.astype(jnp.float32))
+    return L.linear({"w": params["out_proj"]}, y.astype(x.dtype))
+
+
+# ---- decode ----------------------------------------------------------------
+
+def mamba2_cache_defs(cfg: ModelConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    d_in, H, Pd, N = _dims(cfg)
+    K = cfg.ssm.conv_width
+    return {
+        "state": jax.ShapeDtypeStruct((batch, H, N, Pd), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, K - 1, d_in + 2 * N), jnp.dtype(cfg.dtype)),
+    }
+
+
+def decode_mamba2(cfg: ModelConfig, params, x: jax.Array, cache) -> Tuple[jax.Array, Dict]:
+    """One-token step. x: (B,1,d)."""
+    d_in, H, Pd, N = _dims(cfg)
+    B = x.shape[0]
+    zxbcdt = L.linear({"w": params["in_proj"]}, x)                # (B,1,Dp)
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    # rolling conv window
+    win = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))[:, None, :]
+    xbc = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    xs = xs.reshape(B, H, Pd)
+    dA = jnp.exp(dt * A)                                          # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0], dt, xs)
+    state = cache["state"] * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], state)
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(B, 1, d_in) * jax.nn.silu(z.astype(jnp.float32))
+    out = L.linear({"w": params["out_proj"]}, y.astype(x.dtype))
+    return out, {"state": state, "conv": win[:, 1:]}

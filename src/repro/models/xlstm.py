@@ -1,0 +1,267 @@
+"""xLSTM blocks: mLSTM (matrix memory, recurrent-scan form) and sLSTM
+(scalar memory with block-diagonal recurrence), per Beck et al. 2024.
+
+Both use the stabilized exponential-gating recurrences.  The mLSTM is
+expressed as a ``lax.scan`` over the sequence with a per-head (hd x hd)
+matrix state; the projections (the FLOP-dominant part) are batched matmuls
+outside the scan, so the MXU still sees large GEMMs.  Decode is a single
+recurrence step — O(1) state, which is why xlstm runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.common.params import ParamDef
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mdims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = int(cfg.d_model * cfg.xlstm.proj_factor)
+    H = cfg.num_heads
+    return d_in, H, d_in // H
+
+
+def mlstm_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    d_in, H, hd = _mdims(cfg)
+    return {
+        "up": ParamDef((d, 2 * d_in), ("embed", "mlp"), "normal", dt),
+        "q": ParamDef((d_in, d_in), (None, "heads"), "normal", dt),
+        "k": ParamDef((d_in, d_in), (None, "heads"), "normal", dt),
+        "v": ParamDef((d_in, d_in), (None, "heads"), "normal", dt),
+        "gates": ParamDef((d_in, 2 * H), (None, None), "normal", jnp.float32, scale=0.1),
+        "gate_bias": ParamDef((2 * H,), (None,), "zeros", jnp.float32),
+        "down": ParamDef((d_in, d), ("mlp", "embed"), "normal", dt),
+    }
+
+
+def _mlstm_scan(q, k, v, i_raw, f_raw, state):
+    """q,k,v: (B,S,H,hd); i_raw,f_raw: (B,S,H); state: (C,n,m)."""
+    B, S, H, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    scale = 1.0 / np.sqrt(hd)
+
+    def step(carry, xs):
+        C, n, m = carry                                  # (B,H,hd,hd),(B,H,hd),(B,H)
+        qt, kt, vt, it, lft = xs
+        qt = qt.astype(jnp.float32) * scale
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        m_new = jnp.maximum(lft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(lft + m - m_new)
+        C = C * fp[..., None, None] + ip[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = n * fp[..., None] + ip[..., None] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, C)
+        # |n^T q| floored at 1 in UNstabilized space = exp(-m) stabilized
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+          jnp.moveaxis(i_raw.astype(jnp.float32), 1, 0), jnp.moveaxis(logf, 1, 0))
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state                 # (B,S,H,hd)
+
+
+def _mlstm_chunkwise(q, k, v, i_raw, f_raw, state, *, chunk: int):
+    """Chunkwise-parallel mLSTM (stabilized), equivalent to ``_mlstm_scan``.
+
+    Within a chunk the contributions are an attention-like (Q x Q) masked
+    product; across chunks only the (C, n, m) state is carried — so the
+    backward pass stores O(S/chunk) carries instead of O(S).  This is the
+    memory fix for the train_4k cell (EXPERIMENTS.md section Perf, iteration
+    xlstm-1).
+    """
+    B, S, H, hd = q.shape
+    pad = (-S) % chunk
+    if pad:
+        padf = lambda x_, val=0.0: jnp.pad(
+            x_, ((0, 0), (0, pad)) + ((0, 0),) * (x_.ndim - 2),
+            constant_values=val)
+        q, k, v = padf(q), padf(k), padf(v)
+        i_raw = padf(i_raw, -1e30)      # padded steps never contribute
+        f_raw = padf(f_raw, 30.0)       # forget ~ 1 keeps state unchanged
+    nc = q.shape[1] // chunk
+    Q = chunk
+    scale = 1.0 / np.sqrt(hd)
+
+    def resh(x_):
+        return jnp.moveaxis(
+            x_.reshape(B, nc, Q, *x_.shape[2:]), 1, 0)      # (nc,B,Q,...)
+
+    # bf16 inputs keep the heavy (B,Q,Q,H) operands in bf16 (gating math
+    # stays fp32) — halves the HBM traffic of the chunk-local tensors
+    # (EXPERIMENTS section Perf, iteration xlstm-4)
+    cdt = q.dtype if q.dtype == jnp.bfloat16 else jnp.float32
+    qs = resh((q.astype(jnp.float32) * scale).astype(cdt))
+    ks, vs = resh(k.astype(cdt)), resh(v.astype(cdt))
+    logi = resh(i_raw.astype(jnp.float32))                  # (nc,B,Q,H)
+    logf = resh(jax.nn.log_sigmoid(f_raw.astype(jnp.float32)))
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry                                     # (B,H,hk,hv),(B,H,hk),(B,H)
+        qc, kc, vc, lic, lfc = xs
+        qc32, kc32 = qc.astype(jnp.float32), kc.astype(jnp.float32)
+        F = jnp.cumsum(lfc, axis=1)                         # (B,Q,H)
+        # D[t,j] = F_t - F_j + logi_j   (valid j<=t)
+        D = (F[:, :, None, :] - F[:, None, :, :] + lic[:, None, :, :])
+        D = jnp.where(tri[None, :, :, None], D, -jnp.inf)   # (B,Q,Q,H)
+        b = F + m[:, None, :]                               # (B,Q,H)
+        m_t = jnp.maximum(jnp.max(D, axis=2), b)            # (B,Q,H)
+        W = jnp.exp(D - m_t[:, :, None, :])                 # (B,Q,Q,H) f32
+        g = jnp.exp(b - m_t)                                # (B,Q,H)
+        S_ = jnp.einsum("bqhd,bjhd->bqjh", qc, kc,
+                        preferred_element_type=jnp.float32) # (B,Q,Q,H)
+        WS = W * S_                                         # fused weightxscore
+        num = jnp.einsum("bqjh,bjhv->bqhv", WS.astype(cdt), vc,
+                         preferred_element_type=jnp.float32)
+        num = num + g[..., None] * jnp.einsum("bqhk,bhkv->bqhv", qc32, C)
+        den = jnp.sum(WS, axis=2) + g * jnp.einsum("bqhk,bhk->bqh", qc32, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- state to next chunk
+        FQ = F[:, -1, :]                                    # (B,H)
+        d_end = FQ[:, None, :] - F + lic                    # (B,Q,H)
+        m_out = jnp.maximum(FQ + m, jnp.max(d_end, axis=1))
+        w_end = jnp.exp(d_end - m_out[:, None, :])
+        C_new = (jnp.exp(FQ + m - m_out)[..., None, None] * C +
+                 jnp.einsum("bjh,bjhk,bjhv->bhkv", w_end, kc, vc,
+                            preferred_element_type=jnp.float32))
+        n_new = (jnp.exp(FQ + m - m_out)[..., None] * n +
+                 jnp.einsum("bjh,bjhk->bhk", w_end, kc,
+                            preferred_element_type=jnp.float32))
+        return (C_new, n_new, m_out), h
+
+    state, hs = jax.lax.scan(chunk_step, state, (qs, ks, vs, logi, logf))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, nc * Q, H, hd)
+    return hs[:, :S], state
+
+
+def _mlstm_qkvg(cfg, params, x):
+    d_in, H, hd = _mdims(cfg)
+    B, S, _ = x.shape
+    up = L.linear({"w": params["up"]}, x)
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = L.linear({"w": params["q"]}, xm).reshape(B, S, H, hd)
+    k = L.linear({"w": params["k"]}, xm).reshape(B, S, H, hd) / np.sqrt(hd)
+    v = L.linear({"w": params["v"]}, xm).reshape(B, S, H, hd)
+    g = xm.astype(jnp.float32) @ params["gates"] + params["gate_bias"]
+    i_raw, f_raw = jnp.split(g, 2, axis=-1)              # (B,S,H)
+    return q, k, v, i_raw, f_raw, z
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    d_in, H, hd = _mdims(cfg)
+    return {
+        "C": jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, H, hd), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, H), jnp.float32),
+    }
+
+
+def _zeros_state(cfg, batch):
+    """(C, n, m) zero-state tuple — explicit order (dict .values() is unsafe
+    after jax.tree.map, which sorts keys)."""
+    s = mlstm_init_state(cfg, batch)
+    return tuple(jnp.zeros(s[k].shape, s[k].dtype) for k in ("C", "n", "m"))
+
+
+def apply_mlstm(cfg: ModelConfig, params, x: jax.Array,
+                chunkwise: bool = True) -> jax.Array:
+    d_in, H, hd = _mdims(cfg)
+    B, S, _ = x.shape
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvg(cfg, params, x)
+    if chunkwise:
+        h, _ = _mlstm_chunkwise(q, k, v, i_raw, f_raw, _zeros_state(cfg, B),
+                                chunk=cfg.xlstm.chunk_size)
+    else:
+        h, _ = _mlstm_scan(q, k, v, i_raw, f_raw, _zeros_state(cfg, B))
+    y = h.reshape(B, S, d_in).astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    return L.linear({"w": params["down"]}, y.astype(x.dtype))
+
+
+def decode_mlstm(cfg: ModelConfig, params, x: jax.Array, cache) -> Tuple[jax.Array, Dict]:
+    d_in, H, hd = _mdims(cfg)
+    B = x.shape[0]
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvg(cfg, params, x)   # S=1
+    state = (cache["C"], cache["n"], cache["m"])
+    h, (C, n, m) = _mlstm_scan(q, k, v, i_raw, f_raw, state)
+    y = h.reshape(B, 1, d_in).astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    out = L.linear({"w": params["down"]}, y.astype(x.dtype))
+    return out, {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    H = cfg.num_heads
+    hd = d // H
+    return {
+        "w": ParamDef((d, 4 * d), ("embed", "mlp"), "normal", dt),
+        "r": ParamDef((H, hd, 4 * hd), (None, None, None), "normal", jnp.float32, scale=0.5),
+        "bias": ParamDef((4 * d,), (None,), "zeros", jnp.float32),
+        "out": ParamDef((d, d), ("mlp", "embed"), "normal", dt),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {k: jax.ShapeDtypeStruct((batch, d), jnp.float32) for k in ("c", "n", "h", "m")}
+
+
+def _slstm_scan(cfg, params, wx, state):
+    """wx: (B,S,4d) precomputed input contributions."""
+    H = cfg.num_heads
+    d = cfg.d_model
+    hd = d // H
+
+    def step(carry, wxt):
+        c, n, h, m = carry                               # (B,d) each
+        hh = h.reshape(-1, H, hd)
+        rec = jnp.einsum("bhk,hkf->bhf", hh, params["r"]).reshape(-1, 4 * d)
+        pre = wxt.astype(jnp.float32) + rec + params["bias"]
+        zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zi)
+        ot = jax.nn.sigmoid(oi)
+        logf = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(logf + m, ii)
+        ip = jnp.exp(ii - m_new)
+        fp = jnp.exp(logf + m - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def apply_slstm(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    wx = L.linear({"w": params["w"]}, x)
+    zero = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+    hs, _ = _slstm_scan(cfg, params, wx, zero)
+    return L.linear({"w": params["out"]}, hs.astype(x.dtype))
+
+
+def decode_slstm(cfg: ModelConfig, params, x: jax.Array, cache) -> Tuple[jax.Array, Dict]:
+    wx = L.linear({"w": params["w"]}, x)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    hs, (c, n, h, m) = _slstm_scan(cfg, params, wx, state)
+    out = L.linear({"w": params["out"]}, hs.astype(x.dtype))
+    return out, {"c": c, "n": n, "h": h, "m": m}

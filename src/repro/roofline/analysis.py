@@ -1,0 +1,124 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all *per-chip seconds per step*:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = estimated per-chip link traffic / ICI_bw
+
+``cost_analysis()`` on a compiled SPMD executable reports the per-partition
+program, so FLOPs/bytes are already per-device.  Collective bytes are not in
+cost_analysis: we parse the partitioned HLO text, sum result sizes of every
+collective op, and convert result sizes to per-chip link traffic with the
+standard ring-algorithm factors (all-reduce 2X(N-1)/N, all-gather X(N-1)/N,
+reduce-scatter shard*(N-1), all-to-all X(N-1)/N, collective-permute X).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.common.config import HWConfig, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_DONE_RE = re.compile(r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)-done")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [G,N]<=[total]: groups of size N
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _traffic(kind: str, out_bytes: int, n: int) -> float:
+    """Per-chip link traffic estimate (ring algorithms)."""
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * out_bytes * (n - 1) / n
+    if kind == "all-gather":
+        return out_bytes * (n - 1) / n
+    if kind == "reduce-scatter":
+        return out_bytes * (n - 1)          # out is the shard
+    if kind == "all-to-all":
+        return out_bytes * (n - 1) / n
+    return float(out_bytes)                  # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    stats = {k: {"count": 0, "result_bytes": 0, "traffic_bytes": 0.0}
+             for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        if _DONE_RE.search(line):
+            continue  # counted at -start
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        b = _type_bytes(type_str)
+        n = _group_size(line)
+        stats[kind]["count"] += 1
+        stats[kind]["result_bytes"] += b
+        stats[kind]["traffic_bytes"] += _traffic(kind, b, n)
+    return stats
+
+
+def roofline_terms(cost: Dict[str, float], collectives: Dict[str, Dict[str, float]],
+                   hw: HWConfig = TPU_V5E) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    traffic = sum(v["traffic_bytes"] for v in collectives.values())
+    terms = {
+        "compute_s": flops / hw.peak_flops,
+        "memory_s": bytes_acc / hw.hbm_bw,
+        "collective_s": traffic / hw.ici_bw,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collective_traffic_per_chip": traffic,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    terms["bottleneck"] = dom
+    step = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["roofline_step_s"] = step
+    terms["roofline_fraction"] = terms["compute_s"] / step if step > 0 else 0.0
+    return terms
+
+
+def model_flops(param_count: int, active_param_count: int, tokens: int,
+                kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D for train (fwd+bwd), 2*N*D for inference."""
+    n = active_param_count
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

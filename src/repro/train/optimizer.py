@@ -1,0 +1,91 @@
+"""AdamW with sharding-aware state, configurable moment dtype, global-norm
+clipping and warmup+cosine schedule.  (optax is not available offline; this is
+the production subset we need, sharded identically to the parameters so
+optimizer state is FSDP/TP-partitioned with no extra collectives.)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import OptimizerConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    m: Any                   # first moment (params-like)
+    v: Any                   # second moment (params-like)
+
+
+def init_opt_state(cfg: OptimizerConfig, params: Any) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def abstract_opt_state(cfg: OptimizerConfig, params_abs: Any) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    m=jax.tree.map(z, params_abs),
+                    v=jax.tree.map(z, params_abs))
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * (step + 1.0) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * cfg.lr * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: OptimizerConfig, params: Any, grads: Any,
+                 state: OptState) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step.  All math in fp32; moments stored in cfg.moment_dtype;
+    params updated in their storage dtype."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) if cfg.grad_clip > 0 else 1.0
+    step = state.step + 1
+    lr = lr_schedule(cfg, state.step)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd_math(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p32
+        return ((p32 - lr * delta).astype(p.dtype),
+                m32.astype(mdt), v32.astype(mdt))
+
+    # NOTE: a per-layer lax.map over scan-stacked leaves was tried to bound
+    # the fp32 update working set; it REGRESSED peak memory by ~30 GB (XLA
+    # loses input/output aliasing across the map) — EXPERIMENTS section Perf,
+    # iteration llama-1 (refuted).  Vectorized update retained.
+    upd = upd_math
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,76 @@
+"""jit-able train / serve step builders.
+
+``train_step``: microbatched gradient accumulation via ``lax.scan`` (bounds
+activation memory at scale), fp32 grad accumulators, AdamW update, metrics.
+``serve_prefill`` / ``serve_decode``: the two serving entry points the
+decode-shaped dry-run cells lower.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import RunConfig
+from repro.models.model import LM
+from repro.train.optimizer import OptState, adamw_update, init_opt_state
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int) -> Dict[str, jax.Array]:
+    def sp(x):
+        assert x.shape[0] % n == 0, f"batch {x.shape[0]} not divisible by {n} microbatches"
+        return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(lm: LM, run: RunConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    nmb = run.microbatches
+
+    def loss_fn(params, mb):
+        return lm.loss(params, mb)
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, jax.Array]):
+        if nmb == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, nmb)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                acc_g, acc_l = carry
+                (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc_g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_l + l), aux
+
+            (grads, loss), auxs = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            loss = loss / nmb
+            aux = jax.tree.map(lambda x: jnp.mean(x), auxs)
+
+        new_params, new_opt, stats = adamw_update(run.opt, params, grads, opt_state)
+        metrics = {"loss": loss, **stats}
+        for k, v in aux.items():
+            metrics[k] = v
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_prefill(lm: LM, max_seq: int) -> Callable:
+    def serve_prefill(params, batch):
+        return lm.prefill(params, batch, max_seq)
+    return serve_prefill
+
+
+def make_serve_decode(lm: LM) -> Callable:
+    def serve_decode(params, tokens, cache, pos):
+        return lm.decode(params, tokens, cache, pos)
+    return serve_decode
+
+
+def init_train_state(lm: LM, run: RunConfig, key: jax.Array) -> Tuple[Any, OptState]:
+    params = lm.init(key)
+    return params, init_opt_state(run.opt, params)

@@ -1,0 +1,33 @@
+import os
+import sys
+from pathlib import Path
+
+# tests must see 1 CPU device (the dry-run sets its own 512-device flag in a
+# subprocess); keep any user XLA_FLAGS out of the way.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def detectors():
+    """Session-cached light+server detectors (trained once, ckpt-cached)."""
+    from repro.train.detector_train import train_detector
+    server = train_detector("server", steps=600, batch=12, cache=True)
+    light = train_detector("light", steps=300, batch=12, cache=True)
+    return light, server
+
+
+@pytest.fixture()
+def scene():
+    from repro.data.synthetic import MultiCameraScene, SceneConfig
+    return MultiCameraScene(SceneConfig(seed=123, num_cameras=3))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
