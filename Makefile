@@ -1,0 +1,13 @@
+# Tier-1 tests + quick perf smoke — run `make ci` per PR so batched-path
+# regressions (correctness or slot-step latency) are caught early.
+PY := PYTHONPATH=src python
+
+.PHONY: test bench-quick ci
+
+test:
+	$(PY) -m pytest -q
+
+bench-quick:
+	$(PY) -m benchmarks.run --quick --only bench_allocation bench_latency
+
+ci: test bench-quick

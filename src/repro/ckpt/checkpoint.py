@@ -31,9 +31,34 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard as zstd
+
+import zlib
+
+try:
+    import zstandard as zstd
+    HAVE_ZSTD = True
+except ImportError:          # container without zstandard: fall back to zlib
+    zstd = None
+    HAVE_ZSTD = False
 
 COMMIT_MARKER = "COMMITTED"
+
+
+def _compress(data: bytes) -> Tuple[bytes, str]:
+    if HAVE_ZSTD:
+        return zstd.ZstdCompressor(level=3).compress(data), "zstd"
+    return zlib.compress(data, 3), "zlib"
+
+
+def _decompress(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if not HAVE_ZSTD:
+            raise RuntimeError("checkpoint was written with zstd but "
+                               "zstandard is not installed")
+        return zstd.ZstdDecompressor().decompress(blob)
+    if codec == "zlib":
+        return zlib.decompress(blob)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten(tree: Any):
@@ -95,19 +120,19 @@ def _write_checkpoint(host_leaves, treedef_str: str, path: Path, *,
         import shutil
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
-    comp = zstd.ZstdCompressor(level=3)
     manifest = {"step": step, "metadata": metadata, "treedef": treedef_str,
                 "leaves": {}}
     pid = jax.process_index() if jax.process_count() > 1 else 0
     data_path = tmp / f"data.{pid}.bin"
     with open(data_path, "wb") as f:
         for key, arr in host_leaves:
-            blob = comp.compress(np.ascontiguousarray(arr).tobytes())
+            blob, codec = _compress(np.ascontiguousarray(arr).tobytes())
             off = f.tell()
             f.write(blob)
             manifest["leaves"][key] = {
                 "shape": list(arr.shape), "dtype": str(arr.dtype),
                 "offset": off, "nbytes": len(blob), "file": data_path.name,
+                "codec": codec,
             }
         f.flush()
         os.fsync(f.fileno())
@@ -151,7 +176,6 @@ def restore(path: str | Path, target: Any, *, shardings: Any = None) -> Tuple[An
     if not is_committed(path):
         raise FileNotFoundError(f"no committed checkpoint at {path}")
     manifest = json.loads((path / "manifest.json").read_text())
-    dec = zstd.ZstdDecompressor()
     files = {p.name: p for p in path.glob("data.*.bin")}
 
     leaves, treedef = jax.tree_util.tree_flatten_with_path(target)
@@ -167,7 +191,8 @@ def restore(path: str | Path, target: Any, *, shardings: Any = None) -> Tuple[An
         with open(fp, "rb") as f:
             f.seek(ent["offset"])
             blob = f.read(ent["nbytes"])
-        arr = np.frombuffer(dec.decompress(blob), dtype=ent["dtype"]).reshape(ent["shape"])
+        raw = _decompress(blob, ent.get("codec", "zstd"))
+        arr = np.frombuffer(raw, dtype=ent["dtype"]).reshape(ent["shape"])
         if tuple(arr.shape) != tuple(tgt.shape):
             raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs target {tgt.shape}")
         if str(tgt.dtype) != ent["dtype"]:

@@ -35,18 +35,14 @@ class Allocation:
 def build_utility_table(mlp_params, a: np.ndarray, c: np.ndarray,
                         bitrates: Sequence[int], resolutions: Sequence[float],
                         weights: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """Returns (util (I, J) = lambda_i * max_r alpha_hat, best_res (I, J))."""
-    I = len(a)
-    J = len(bitrates)
-    aa = np.repeat(np.asarray(a, np.float32)[:, None, None], J, 1)
-    cc_ = np.repeat(np.asarray(c, np.float32)[:, None, None], J, 1)
-    bb = np.tile(np.asarray(bitrates, np.float32)[None, :, None], (I, 1, 1))
-    util_r = []
-    for r in resolutions:
-        rr = np.full((I, J, 1), r, np.float32)
-        pred = np.asarray(U.predict(mlp_params, aa, cc_, bb, rr))[..., 0]
-        util_r.append(pred)
-    util_r = np.stack(util_r, axis=-1)                    # (I, J, R)
+    """Returns (util (I, J) = lambda_i * max_r alpha_hat, best_res (I, J)).
+
+    One fused (I*J*R, 4) MLP evaluation instead of a Python loop over the
+    resolution axis (R separate dispatches)."""
+    util_r = np.asarray(U.predict_grid(
+        mlp_params, np.asarray(a, np.float32), np.asarray(c, np.float32),
+        np.asarray(bitrates, np.float32),
+        np.asarray(resolutions, np.float32)))             # (I, J, R)
     best_r_idx = util_r.argmax(-1)
     best = util_r.max(-1) * np.asarray(weights, np.float32)[:, None]
     best_res = np.asarray(resolutions, np.float32)[best_r_idx]

@@ -47,7 +47,7 @@ def effective_pixels(cfg: CodecConfig, roi_pixels: float, num_frames: int,
 
 def _avg_pool(frames: jax.Array, k: int) -> jax.Array:
     N, H, W = frames.shape
-    x = frames[:H // k * k // 1].reshape(N, H // k, k, W // k, k)
+    x = frames[:, :H // k * k, :W // k * k].reshape(N, H // k, k, W // k, k)
     return x.mean(axis=(2, 4))
 
 
@@ -57,17 +57,27 @@ def _resolution_blur(frames: jax.Array, res: float) -> jax.Array:
         return frames
     k = 2 if res > 0.6 else 4 if res > 0.3 else 8
     small = _avg_pool(frames, k)
-    return jnp.kron(small, jnp.ones((1, k, k), frames.dtype))[:, :frames.shape[1], :frames.shape[2]]
+    up = jnp.kron(small, jnp.ones((1, k, k), frames.dtype))
+    N, H, W = frames.shape
+    # H/W not divisible by k: pooling cropped the tail; extend with edge rows
+    up = jnp.pad(up, ((0, 0), (0, max(H - up.shape[1], 0)),
+                      (0, max(W - up.shape[2], 0))), mode="edge")
+    return up[:, :H, :W]
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def encode_segment(cfg: CodecConfig, frames: jax.Array, roi_pixels: jax.Array,
-                   bitrate_kbps: jax.Array, res: jax.Array, key: jax.Array
+                   bitrate_kbps: jax.Array, res: jax.Array, key: jax.Array,
+                   num_frames: Optional[jax.Array] = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Simulate encode+decode.  frames (N,H,W) already ROI-masked (or full).
+    ``num_frames`` (traced scalar) overrides the shape-derived frame count for
+    effective-pixel accounting — the fleet reducto path encodes fixed-shape
+    segments whose *kept* frame count varies per camera.
     Returns (decoded frames (N,H,W), size_bytes scalar)."""
     N = frames.shape[0]
-    pix = roi_pixels * res * res * (1.0 + cfg.temporal_rho * (N - 1))
+    n_eff = jnp.float32(N) if num_frames is None else num_frames.astype(jnp.float32)
+    pix = roi_pixels * res * res * (1.0 + cfg.temporal_rho * (n_eff - 1))
     bits = bitrate_kbps * 1000.0 * cfg.slot_seconds
     bpp = bits / jnp.maximum(pix, 1.0)
 

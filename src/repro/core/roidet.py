@@ -52,6 +52,24 @@ def _boxes_to_mask(boxes: jax.Array, valid: jax.Array, M: int, N: int,
     return jnp.any(masks, axis=0)
 
 
+def _roi_union(D: jax.Array, dboxes: jax.Array, dvalid: jax.Array, M: int,
+               N: int, block_size: int, max_boxes: int):
+    """One camera's ROI tail (Alg.1 l.11-12), shared by the single-camera and
+    fleet paths: connected components of the motion matrix, union with the
+    detector boxes, one-block dilation (box-boundary pixels carry the
+    object's edges — without the halo, cropped encodes clip object borders
+    and detection recall drops at high bitrates).
+    Returns (mask, area_ratio, motion_boxes, motion_valid)."""
+    mboxes, mvalid, _ = cc.label_and_boxes(D, max_boxes=max_boxes)
+    motion_mask = _boxes_to_mask(mboxes, mvalid, M, N, scale=1.0)
+    det_mask = _boxes_to_mask(dboxes, dvalid, M, N, scale=1.0 / block_size)
+    mask = motion_mask | det_mask
+    p = jnp.pad(mask, 1)
+    mask = (p[1:-1, 1:-1] | p[:-2, 1:-1] | p[2:, 1:-1]
+            | p[1:-1, :-2] | p[1:-1, 2:])
+    return mask, jnp.mean(mask.astype(jnp.float32)), mboxes, mvalid
+
+
 @functools.partial(jax.jit, static_argnames=(
     "block_size", "use_kernel", "max_boxes", "motion_thresh", "edge_thresh",
     "conf_thresh"))
@@ -81,27 +99,62 @@ def roidet(frames: jax.Array, det_params: Any, *, block_size: int = 8,
                                    use_kernel=use_kernel)   # (N-1, M, N)
     D = jnp.any(scores > motion_thresh, axis=0)             # (M, N) bool
 
-    # ---- connected components (Alg.1 l.11)
-    mboxes, mvalid, _ = cc.label_and_boxes(D, max_boxes=max_boxes)
-
-    # ---- union ROI (Alg.1 l.12), dilated one block: box-boundary pixels
-    # carry the object's edges — without the halo, cropped encodes clip
-    # object borders and detection recall drops at high bitrates
-    motion_mask = _boxes_to_mask(mboxes, mvalid, M, N, scale=1.0)
-    det_mask = _boxes_to_mask(dboxes, dvalid, M, N, scale=1.0 / block_size)
-    mask = motion_mask | det_mask
-    p = jnp.pad(mask, 1)
-    mask = (p[1:-1, 1:-1] | p[:-2, 1:-1] | p[2:, 1:-1]
-            | p[1:-1, :-2] | p[1:-1, 2:])
-    area = jnp.mean(mask.astype(jnp.float32))
+    # ---- connected components + union ROI (Alg.1 l.11-12)
+    mask, area, mboxes, mvalid = _roi_union(D, dboxes, dvalid, M, N,
+                                            block_size, max_boxes)
     return ROIResult(mask=mask, area_ratio=area, confidence=conf,
                      motion_boxes=mboxes, motion_valid=mvalid,
                      det_boxes=dboxes, det_valid=dvalid)
 
 
-def roidet_fleet(frames: jax.Array, det_params: Any, **kw):
-    """vmap over the camera axis: frames (C, N, H, W)."""
-    return jax.vmap(lambda f: roidet(f, det_params, **kw))(frames)
+@functools.partial(jax.jit, static_argnames=(
+    "block_size", "use_kernel", "max_boxes", "motion_thresh", "edge_thresh",
+    "conf_thresh"))
+def roidet_fleet(frames: jax.Array, det_params: Any, *, block_size: int = 8,
+                 motion_thresh: float = 16.0, edge_thresh: float = 0.35,
+                 conf_thresh: float = 0.25, use_kernel: bool = True,
+                 max_boxes: int = 16) -> ROIResult:
+    """Fleet ROIDet: frames (C, N, H, W) -> camera-batched ROIResult.
+
+    Same math as vmapping ``roidet`` over cameras, restructured so the light
+    detector runs ONE (2C,H,W) forward and motion runs ONE pallas grid over
+    all C*(N-1) frame pairs (``segment_motion_fleet``) — a single dispatch
+    per slot for the whole camera side.
+    """
+    C, N_f, H, W = frames.shape
+    M, N = H // block_size, W // block_size
+
+    # ---- stationary objects: light detector on first + last frame, all cams
+    grid = det.forward(det_params,
+                       jnp.concatenate([frames[:, 0], frames[:, -1]]))
+    b2, s2, v2 = det.decode_boxes(grid, conf_thresh=conf_thresh)  # (2C,K,..)
+    dboxes = jnp.concatenate([b2[:C], b2[C:]], axis=1)            # (C,2K,4)
+    dscores = jnp.concatenate([s2[:C], s2[C:]], axis=1)
+    dvalid = jnp.concatenate([v2[:C], v2[C:]], axis=1)
+    conf = (jnp.sum(jnp.where(dvalid, dscores, 0.0), axis=1)
+            / jnp.maximum(jnp.sum(dvalid, axis=1), 1))
+
+    # ---- moving objects: one kernel grid over every (camera, frame pair)
+    scores = em_ops.segment_motion_fleet(frames, block_size=block_size,
+                                         edge_thresh=edge_thresh,
+                                         use_kernel=use_kernel)  # (C,N-1,M,N)
+    D = jnp.any(scores > motion_thresh, axis=1)                  # (C,M,N)
+
+    mask, area, mboxes, mvalid = jax.vmap(
+        lambda D_i, db_i, dv_i: _roi_union(D_i, db_i, dv_i, M, N,
+                                           block_size, max_boxes)
+    )(D, dboxes, dvalid)
+    return ROIResult(mask=mask, area_ratio=area, confidence=conf,
+                     motion_boxes=mboxes, motion_valid=mvalid,
+                     det_boxes=dboxes, det_valid=dvalid)
+
+
+def full_frame_mask(num_cameras: int, H: int, W: int, block_size: int
+                    ) -> jax.Array:
+    """All-ones block mask batch: encodes 'no cropping' for the fleet path
+    (crop_to_mask with an all-ones mask is the identity, and its pixel count
+    is exactly H*W)."""
+    return jnp.ones((num_cameras, H // block_size, W // block_size), bool)
 
 
 def crop_to_mask(frames: jax.Array, mask: jax.Array, block_size: int) -> jax.Array:

@@ -50,6 +50,25 @@ def predict(params, a, c, b_kbps, r) -> jax.Array:
     return jax.nn.sigmoid(h @ params["w3"] + params["b3"])[..., 0]
 
 
+@jax.jit
+def predict_grid(params, a: jax.Array, c: jax.Array, bitrates: jax.Array,
+                 resolutions: jax.Array) -> jax.Array:
+    """Fused (I, J, R) utility sweep in ONE (I*J*R, 4) MLP call.
+
+    a, c: (I,) content features; bitrates: (J,); resolutions: (R,).
+    Returns alpha_hat (I, J, R) — identical values to looping predict() over
+    the resolution axis, without R separate dispatches.
+    """
+    I, J, R = a.shape[0], bitrates.shape[0], resolutions.shape[0]
+    aa = jnp.broadcast_to(a[:, None, None], (I, J, R))
+    cc_ = jnp.broadcast_to(c[:, None, None], (I, J, R))
+    bb = jnp.broadcast_to(bitrates[None, :, None], (I, J, R))
+    rr = jnp.broadcast_to(resolutions[None, None, :], (I, J, R))
+    flat = predict(params, aa.reshape(-1), cc_.reshape(-1), bb.reshape(-1),
+                   rr.reshape(-1))
+    return flat.reshape(I, J, R)
+
+
 def fit(params, features: np.ndarray, targets: np.ndarray, *,
         steps: int = 800, lr: float = 3e-3, seed: int = 0) -> Tuple[Any, float]:
     """features: (n, 4) raw (a, c, b_kbps, r); targets: (n,) measured F1."""

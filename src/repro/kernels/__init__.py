@@ -1,3 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+import os
+
+
+def pallas_interpret_default() -> bool:
+    """One switch for every kernel wrapper: REPRO_PALLAS_INTERPRET=0 runs the
+    compiled Pallas path (TPU); unset/1 runs interpret mode (CPU container)."""
+    v = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if v is None:
+        return True
+    return v.strip().lower() not in ("0", "false", "no", "off")

@@ -6,11 +6,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import pallas_interpret_default
 from repro.kernels.edge_motion import ref
 from repro.kernels.edge_motion.edge_motion import edge_motion_pallas
 
-# On this CPU container kernels run in interpret mode; on TPU set False.
-INTERPRET = True
+INTERPRET = pallas_interpret_default()
 
 
 def _make_tiles(frames: jax.Array, tile_rows: int) -> jax.Array:
@@ -19,8 +19,9 @@ def _make_tiles(frames: jax.Array, tile_rows: int) -> jax.Array:
     assert H % tile_rows == 0, (H, tile_rows)
     x = jnp.pad(frames, ((0, 0), (1, 1), (1, 1)), mode="edge")  # (N, H+2, W+2)
     T = H // tile_rows
-    tiles = [x[:, i * tile_rows:i * tile_rows + tile_rows + 2, :] for i in range(T)]
-    return jnp.stack(tiles, axis=1)
+    # strided gather: band t covers padded rows [t*TH, t*TH + TH + 2)
+    rows = (jnp.arange(T) * tile_rows)[:, None] + jnp.arange(tile_rows + 2)[None, :]
+    return x[:, rows, :]                                        # (N, T, TH+2, W+2)
 
 
 @functools.partial(jax.jit, static_argnames=("block_size", "tile_rows", "use_kernel", "edge_thresh"))
@@ -37,4 +38,31 @@ def segment_motion(frames: jax.Array, *, block_size: int = 8,
     out = edge_motion_pallas(tiles[:-1], tiles[1:], block_size=block_size,
                              edge_thresh=edge_thresh, interpret=INTERPRET)
     P, T, th_b, w_b = out.shape
-    return out.transpose(0, 1, 2, 3).reshape(P, T * th_b, w_b)
+    return out.reshape(P, T * th_b, w_b)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "tile_rows", "use_kernel", "edge_thresh"))
+def segment_motion_fleet(frames: jax.Array, *, block_size: int = 8,
+                         edge_thresh: float = 0.35, tile_rows: int = 32,
+                         use_kernel: bool = True) -> jax.Array:
+    """Camera-batched variant: frames (C, N, H, W) -> (C, N-1, H/bs, W/bs).
+
+    Folds the camera axis into the kernel's pair axis so the whole fleet is
+    ONE pallas grid launch (C*(N-1), T) instead of C vmapped launches.
+    Bit-identical to vmapping ``segment_motion`` over cameras: each (pair,
+    tile) program is independent.
+    """
+    C, N, H, W = frames.shape
+    tile_rows = min(tile_rows, H)
+    if not use_kernel:
+        return jax.vmap(lambda f: ref.segment_motion_ref(
+            f, block_size=block_size, edge_thresh=edge_thresh))(frames)
+    tiles = _make_tiles(frames.reshape(C * N, H, W), tile_rows)
+    tiles = tiles.reshape(C, N, *tiles.shape[1:])     # (C,N,T,TH+2,W+2)
+    pair_shape = (C * (N - 1),) + tiles.shape[2:]
+    out = edge_motion_pallas(tiles[:, :-1].reshape(pair_shape),
+                             tiles[:, 1:].reshape(pair_shape),
+                             block_size=block_size, edge_thresh=edge_thresh,
+                             interpret=INTERPRET)
+    P, T, th_b, w_b = out.shape
+    return out.reshape(C, N - 1, T * th_b, w_b)

@@ -7,10 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import pallas_interpret_default
 from repro.kernels.flash_decode import ref
 from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
 
-INTERPRET = True
+INTERPRET = pallas_interpret_default()
 
 
 def _kernel_ok(q, k, block_s):

@@ -8,10 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import pallas_interpret_default
 from repro.kernels.knapsack_dp import ref
 from repro.kernels.knapsack_dp.knapsack_dp import knapsack_dp_pallas
 
-INTERPRET = True
+INTERPRET = pallas_interpret_default()
 
 
 @functools.partial(jax.jit, static_argnames=("W", "use_kernel"))
@@ -25,11 +26,19 @@ def solve_values(util: jax.Array, costs: jax.Array, W: int,
 def solve(util: np.ndarray, costs: np.ndarray, W: int,
           use_kernel: bool = True) -> Tuple[np.ndarray, float]:
     """Full solve: DP sweep + backtrack.  Returns (per-camera option index
-    picks (I,), achieved total utility)."""
+    picks (I,), achieved total utility).
+
+    The static capacity is bucketed up to the next multiple of 128 (the
+    kernel's native row padding) and the exact-W columns sliced outside:
+    value row entries w <= W don't depend on the capacity bound, so results
+    are identical while every slot of a bandwidth trace shares ONE compiled
+    sweep instead of recompiling per distinct W."""
+    Wb = ((W + 1 + 127) // 128) * 128 - 1
     vals, choices = solve_values(jnp.asarray(util, jnp.float32),
-                                 jnp.asarray(costs, jnp.int32), int(W),
+                                 jnp.asarray(costs, jnp.int32), int(Wb),
                                  use_kernel)
-    picks, _ = ref.backtrack(np.asarray(choices), np.asarray(costs),
-                             np.asarray(vals))
-    total = float(np.asarray(vals).max())
+    vals = np.asarray(vals)[:W + 1]
+    choices = np.asarray(choices)[:, :W + 1]
+    picks, _ = ref.backtrack(choices, np.asarray(costs), vals)
+    total = float(vals.max())
     return picks, total

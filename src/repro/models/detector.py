@@ -144,6 +144,55 @@ def detection_loss(params, frames: jax.Array, targets: jax.Array) -> jax.Array:
 # F1 metric (the paper's utility)
 # ---------------------------------------------------------------------------
 
+def f1_score_padded(pred_boxes: jax.Array, pred_valid: jax.Array,
+                    gt_boxes: jax.Array, gt_valid: jax.Array,
+                    iou_thresh: float = 0.3) -> jax.Array:
+    """Traced F1 for one frame with padded GT: (K,4),(K,),(G,4),(G,) -> scalar.
+
+    Replicates ``f1_score``'s greedy one-to-one matching (preds visited in
+    descending best-IoU order; each checks only its argmax GT) with a
+    ``lax.fori_loop``, so it jits, vmaps over batched decoded segments, and
+    slots into ``lax.scan`` bodies.  Tie order between equal-IoU preds cannot
+    change the match count, so results agree with the numpy path.
+    """
+    K = pred_boxes.shape[0]
+    G = gt_boxes.shape[0]
+    iou = box_iou(pred_boxes, gt_boxes)                            # (K, G)
+    pair_ok = pred_valid[:, None] & gt_valid[None, :]
+    iou_m = jnp.where(pair_ok, iou, -1.0)
+    order = jnp.argsort(-jnp.max(iou_m, axis=1))                   # best first
+
+    def body(p, carry):
+        matched, tp = carry
+        i = order[p]
+        row = iou_m[i]
+        j = jnp.argmax(row)
+        ok = pred_valid[i] & (row[j] >= iou_thresh) & (~matched[j])
+        matched = matched.at[j].set(matched[j] | ok)
+        return matched, tp + ok.astype(jnp.int32)
+
+    _, tp = jax.lax.fori_loop(0, K, body, (jnp.zeros((G,), bool),
+                                           jnp.int32(0)))
+    n_pred = jnp.sum(pred_valid)
+    n_gt = jnp.sum(gt_valid)
+    tpf = tp.astype(jnp.float32)
+    prec = tpf / jnp.maximum(n_pred, 1)
+    rec = tpf / jnp.maximum(n_gt, 1)
+    f1 = jnp.where(tp == 0, 0.0, 2 * prec * rec / jnp.maximum(prec + rec, 1e-9))
+    both_empty = (n_pred == 0) & (n_gt == 0)
+    either_empty = (n_pred == 0) | (n_gt == 0)
+    return jnp.where(both_empty, 1.0, jnp.where(either_empty, 0.0, f1))
+
+
+def f1_score_batch(pred_boxes: jax.Array, pred_valid: jax.Array,
+                   gt_boxes: jax.Array, gt_valid: jax.Array,
+                   iou_thresh: float = 0.3) -> jax.Array:
+    """Batched F1: (B,K,4),(B,K),(B,G,4),(B,G) -> (B,)."""
+    return jax.vmap(
+        lambda pb, pv, gb, gv: f1_score_padded(pb, pv, gb, gv, iou_thresh)
+    )(pred_boxes, pred_valid, gt_boxes, gt_valid)
+
+
 def f1_score(pred_boxes: np.ndarray, pred_valid: np.ndarray,
              gt_boxes: List[Tuple[int, int, int, int]],
              iou_thresh: float = 0.3) -> float:

@@ -21,6 +21,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.common.params import ParamDef, is_def
 
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
+    """jax.shard_map across jax versions: new API (jax>=0.6, ``check_vma``)
+    vs jax.experimental.shard_map (``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check)
+
 # logical axis name -> mesh axis (or tuple of mesh axes)
 def rules(mesh: Mesh, fsdp_over_pod: bool = False, policy: str = "2d"):
     axes = mesh.axis_names

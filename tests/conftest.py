@@ -8,6 +8,13 @@ os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    from _hypothesis_shim import install as _install_hyp_shim
+    _install_hyp_shim()
+
 import jax
 import numpy as np
 import pytest

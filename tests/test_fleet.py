@@ -1,0 +1,185 @@
+"""Batched fleet slot-step vs the sequential per-camera path, plus the
+allocation-optimality and codec satellite regressions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import allocation as alloc
+from repro.core import codec as codec_mod
+from repro.core import roidet as roidet_mod
+from repro.core.codec import CodecConfig
+from repro.core.scheduler import DeepStreamSystem, SystemConfig
+from repro.data.synthetic import MultiCameraScene, SceneConfig, bandwidth_trace
+from repro.kernels.edge_motion import ops as em_ops
+from repro.models import detector as det
+
+
+@pytest.fixture(scope="module")
+def sys_pair(detectors):
+    """Two systems over the same trained artifacts: sequential + batched."""
+    light, server = detectors
+    pair = []
+    for batched in (False, True):
+        cfg = SystemConfig(scene=SceneConfig(seed=5, num_cameras=3),
+                           eval_frames=3, batched=batched)
+        pair.append(DeepStreamSystem(cfg, light, server))
+    seq, bat = pair
+    prof = MultiCameraScene(SceneConfig(seed=42, num_cameras=3))
+    seq.profile(prof, num_slots=2, mlp_steps=120)
+    bat.mlp, bat.tau_wl, bat.tau_wh = seq.mlp, seq.tau_wl, seq.tau_wh
+    bat.jcab_table = seq.jcab_table
+    return seq, bat
+
+
+def test_fleet_encode_eval_matches_sequential(sys_pair):
+    """Same PRNG keys -> same per-camera F1s and sizes (tolerance-equal)."""
+    seq, bat = sys_pair
+    scene = MultiCameraScene(SceneConfig(seed=21, num_cameras=3))
+    seg = scene.segment()
+    roi = seq.camera_features(seg["frames"])
+    b = np.array([100.0, 400.0, 800.0])
+    r = np.array([1.0, 0.75, 0.5])
+    seq._key = jax.random.PRNGKey(77)
+    f1_seq, sz_seq = [], []
+    for i in range(3):
+        f1, sz = seq.encode_eval(seg["frames"][i], seg["boxes"][i],
+                                 roi.mask[i], b[i], r[i])
+        f1_seq.append(f1); sz_seq.append(sz)
+    bat._key = jax.random.PRNGKey(77)
+    f1f, sizes, _ = bat.fleet_encode_eval(seg["frames"], seg["boxes"],
+                                          roi.mask, b, r)
+    np.testing.assert_allclose(f1f.mean(axis=1), f1_seq, atol=1e-5)
+    np.testing.assert_allclose(sizes, sz_seq, rtol=1e-6)
+
+
+def test_fleet_full_frame_matches_sequential(sys_pair):
+    """All-ones mask == 'no cropping' (jcab/static route)."""
+    seq, bat = sys_pair
+    scene = MultiCameraScene(SceneConfig(seed=22, num_cameras=3))
+    seg = scene.segment()
+    b = np.array([200.0, 200.0, 200.0])
+    r = np.ones(3)
+    seq._key = jax.random.PRNGKey(5)
+    want = [seq.encode_eval(seg["frames"][i], seg["boxes"][i], None,
+                            b[i], r[i]) for i in range(3)]
+    bat._key = jax.random.PRNGKey(5)
+    f1f, sizes, _ = bat.fleet_encode_eval(seg["frames"], seg["boxes"],
+                                          None, b, r)
+    np.testing.assert_allclose(f1f.mean(axis=1), [w[0] for w in want],
+                               atol=1e-5)
+    np.testing.assert_allclose(sizes, [w[1] for w in want], rtol=1e-6)
+
+
+def test_run_deepstream_batched_matches_sequential(sys_pair):
+    """Full control loop: utility/bytes logs agree across modes (<=1e-3)."""
+    seq, bat = sys_pair
+    trace = bandwidth_trace("medium", 3, seed=8) * 3 / 5
+    logs = {}
+    for name, s in (("seq", seq), ("bat", bat)):
+        s._key = jax.random.PRNGKey(1234)
+        scene = MultiCameraScene(SceneConfig(seed=33, num_cameras=3))
+        logs[name] = s.run(scene, trace, method="deepstream")
+    np.testing.assert_allclose(logs["bat"]["utility"], logs["seq"]["utility"],
+                               atol=1e-3)
+    np.testing.assert_allclose(logs["bat"]["bytes"], logs["seq"]["bytes"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(logs["bat"]["alloc_kbps"],
+                               logs["seq"]["alloc_kbps"], rtol=1e-6)
+
+
+def test_run_static_batched_matches_sequential(sys_pair):
+    seq, bat = sys_pair
+    trace = bandwidth_trace("low", 3, seed=4) * 3 / 5
+    logs = {}
+    for name, s in (("seq", seq), ("bat", bat)):
+        s._key = jax.random.PRNGKey(99)
+        scene = MultiCameraScene(SceneConfig(seed=17, num_cameras=3))
+        logs[name] = s.run(scene, trace, method="static")
+    np.testing.assert_allclose(logs["bat"]["utility"], logs["seq"]["utility"],
+                               atol=1e-3)
+
+
+def test_f1_score_batch_matches_numpy(rng):
+    """Traced greedy F1 == the numpy reference on random padded batches."""
+    for trial in range(25):
+        K, G = 8, 6
+        boxes = rng.uniform(0, 60, (K, 4)).astype(np.float32)
+        boxes[:, 2:] = boxes[:, :2] + rng.uniform(4, 30, (K, 2))
+        valid = rng.uniform(size=K) < 0.7
+        n_gt = int(rng.integers(0, G + 1))
+        gt = [tuple(np.concatenate([p, p + s]))
+              for p, s in zip(rng.uniform(0, 60, (n_gt, 2)),
+                              rng.uniform(4, 30, (n_gt, 2)))]
+        want = det.f1_score(boxes, valid, gt)
+        gtb = np.zeros((G, 4), np.float32)
+        gtv = np.zeros(G, bool)
+        for i, bx in enumerate(gt):
+            gtb[i] = bx; gtv[i] = True
+        got = det.f1_score_batch(jnp.asarray(boxes[None]),
+                                 jnp.asarray(valid[None]),
+                                 jnp.asarray(gtb[None]),
+                                 jnp.asarray(gtv[None]))
+        assert float(got[0]) == pytest.approx(want, abs=1e-6), trial
+
+
+def test_greedy_never_beats_dp(rng):
+    """DP is optimal on the bitrate grid: greedy can never exceed it."""
+    bitr = [50, 100, 200, 400]
+    for trial in range(30):
+        I = int(rng.integers(2, 7))
+        util = np.sort(rng.uniform(0, 1, (I, len(bitr))).astype(np.float32),
+                       axis=1)
+        res = np.ones((I, len(bitr)), np.float32)
+        W = float(rng.uniform(60 * I, 450 * I))
+        dp = alloc.allocate_dp(util, res, bitr, W)
+        gr = alloc.allocate_greedy(util, res, bitr, W)
+        assert gr.predicted_utility <= dp.predicted_utility + 1e-5, trial
+
+
+def test_avg_pool_crops_spatial_axes():
+    """Regression: _avg_pool must crop H/W (not N) for non-divisible sizes."""
+    frames = jnp.arange(2 * 7 * 9, dtype=jnp.float32).reshape(2, 7, 9)
+    out = codec_mod._avg_pool(frames, 2)
+    assert out.shape == (2, 3, 4)
+    want = np.asarray(frames)[:, :6, :8].reshape(2, 3, 2, 4, 2).mean((2, 4))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
+
+
+def test_encode_segment_non_divisible_shapes(rng):
+    """Blur path keeps frame shape even when H/W aren't pool-divisible."""
+    cfg = CodecConfig()
+    frames = jnp.asarray(rng.uniform(0, 1, (4, 50, 70)).astype(np.float32))
+    dec, size = codec_mod.encode_segment(
+        cfg, frames, jnp.float32(50 * 70), jnp.float32(200),
+        jnp.float32(0.5), jax.random.PRNGKey(0))
+    assert dec.shape == frames.shape
+    assert np.isfinite(float(size))
+
+
+def test_segment_motion_fleet_matches_per_camera(rng):
+    frames = rng.uniform(0, 1, (3, 4, 32, 48)).astype(np.float32)
+    fleet = em_ops.segment_motion_fleet(jnp.asarray(frames), block_size=8,
+                                        use_kernel=True)
+    for c in range(3):
+        one = em_ops.segment_motion(jnp.asarray(frames[c]), block_size=8,
+                                    use_kernel=True)
+        np.testing.assert_allclose(np.asarray(fleet[c]), np.asarray(one),
+                                   atol=1e-6)
+
+
+def test_roidet_fleet_matches_per_camera(detectors):
+    light, _ = detectors
+    scene = MultiCameraScene(SceneConfig(seed=55, num_cameras=3))
+    seg = scene.segment()
+    fleet = roidet_mod.roidet_fleet(jnp.asarray(seg["frames"]), light,
+                                    block_size=8)
+    for c in range(3):
+        one = roidet_mod.roidet(jnp.asarray(seg["frames"][c]), light,
+                                block_size=8)
+        np.testing.assert_array_equal(np.asarray(fleet.mask[c]),
+                                      np.asarray(one.mask))
+        assert float(fleet.area_ratio[c]) == pytest.approx(
+            float(one.area_ratio), abs=1e-6)
+        assert float(fleet.confidence[c]) == pytest.approx(
+            float(one.confidence), abs=1e-5)
