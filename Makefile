@@ -1,8 +1,10 @@
 # Tier-1 tests + quick perf smoke — run `make ci` per PR so batched-path
 # regressions (correctness or slot-step latency) are caught early.
+# `ci-sharded` replays the tier-1 suite + the quick latency bench under 8
+# fake XLA host devices, exercising the camera-mesh shard_map fleet paths.
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-quick ci
+.PHONY: test bench-quick ci ci-sharded
 
 test:
 	$(PY) -m pytest -q
@@ -10,4 +12,8 @@ test:
 bench-quick:
 	$(PY) -m benchmarks.run --quick --only bench_allocation bench_latency
 
-ci: test bench-quick
+ci-sharded:
+	REPRO_FAKE_DEVICES=8 $(PY) -m pytest -q
+	REPRO_FAKE_DEVICES=8 $(PY) -m benchmarks.run --quick --only bench_latency
+
+ci: test bench-quick ci-sharded

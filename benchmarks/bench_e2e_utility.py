@@ -30,21 +30,27 @@ def run(quick: bool = False) -> dict:
                     logs["utility"].mean())
         sysd.cfg.weights = None
 
-    # batched-vs-sequential spot check: the fleet slot-step must reproduce
-    # the per-camera loop's utility log on the same seeds
+    # batched-vs-sequential spot check: the unified fleet slot-step must
+    # reproduce the per-camera loop's utility log on the same seeds for
+    # every method route (deepstream masks, reducto reuse arm included)
     from repro.core.scheduler import DeepStreamSystem, SystemConfig
-    udiffs = []
-    for batched in (False, True):
-        cfg = SystemConfig(scene=SceneConfig(seed=77),
-                           eval_frames=sysd.cfg.eval_frames, batched=batched)
-        s2 = DeepStreamSystem(cfg, sysd.light, sysd.server, sysd.mlp)
-        s2.tau_wl, s2.tau_wh, s2.jcab_table = (sysd.tau_wl, sysd.tau_wh,
-                                               sysd.jcab_table)
-        logs2 = s2.run(MultiCameraScene(SceneConfig(seed=77)),
-                       bandwidth_trace("medium", 3 if quick else 6, seed=3),
-                       method="deepstream")
-        udiffs.append(logs2["utility"])
-    mode_diff = float(np.max(np.abs(udiffs[0] - udiffs[1])))
+    mode_diffs = {}
+    for method in ("deepstream", "reducto"):
+        udiffs = []
+        for batched in (False, True):
+            cfg = SystemConfig(scene=SceneConfig(seed=77),
+                               eval_frames=sysd.cfg.eval_frames,
+                               batched=batched)
+            s2 = DeepStreamSystem(cfg, sysd.light, sysd.server, sysd.mlp)
+            s2.tau_wl, s2.tau_wh, s2.jcab_table = (sysd.tau_wl, sysd.tau_wh,
+                                                   sysd.jcab_table)
+            logs2 = s2.run(MultiCameraScene(SceneConfig(seed=77)),
+                           bandwidth_trace("medium", 3 if quick else 6,
+                                           seed=3),
+                           method=method)
+            udiffs.append(logs2["utility"])
+        mode_diffs[method] = float(np.max(np.abs(udiffs[0] - udiffs[1])))
+    mode_diff = max(mode_diffs.values())
 
     print("\n[Fig.3] mean slot utility (weighted sum of camera F1):")
     gains = []
@@ -59,10 +65,12 @@ def run(quick: bool = False) -> dict:
                   f"{gain:+.1%}")
     max_gain = max(g for _, _, g in gains)
     low_gains = [g for _, tk, g in gains if tk == "low"]
-    print(f"  batched-vs-sequential max |utility diff|: {mode_diff:.2e}")
+    print("  batched-vs-sequential max |utility diff|: "
+          + " ".join(f"{m}={d:.2e}" for m, d in mode_diffs.items()))
     return {"results": results,
             "max_gain_vs_best_baseline": float(max_gain),
             "mean_low_trace_gain": float(np.mean(low_gains)),
             "batched_vs_sequential_utility_diff": mode_diff,
+            "batched_vs_sequential_utility_diff_by_method": mode_diffs,
             "headline": (f"max gain vs best baseline {max_gain:+.1%}; "
                          f"mode udiff {mode_diff:.1e}")}

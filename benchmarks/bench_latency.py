@@ -1,15 +1,26 @@
 """Fig. 6 analogue: end-to-end per-stage latency breakdown on this host.
 
 Stages mirror the paper's: YoloL (light detector) + Block (edge/motion +
-CC) = ROIDet, Alloc (utility table + DP), Fleet (batched encode+detect+score;
-Compress/Server separately in sequential mode), Transmission (size/bandwidth,
-simulated).  Host-relative: absolute numbers are CPU-container times, the
-*breakdown* is the artifact.
+CC) = ROIDet, Alloc (utility table + DP), Fleet (batched encode+detect+score
+dispatch; Compress/Server separately in sequential mode), Harvest (the packed
+per-slot D2H fetch), Transmission (size/bandwidth, simulated).  Host-relative:
+absolute numbers are CPU-container times, the *breakdown* is the artifact.
 
-Also runs the batched-vs-sequential comparison: the same 8-camera slot
-sequence through the fleet slot-step and through the per-camera Python loop,
-reporting wall-clock speedup and the max utility-log deviation (must be
-within 1e-3 — both paths draw identical PRNG keys).
+Also runs the three-way slot-step comparison on the same slot sequence:
+
+  * sequential — per-camera Python loop (the equivalence reference);
+  * batched    — the PR 1 fleet slot-step: one compiled program per slot but
+                 single-device, blocking harvest, no donation;
+  * sharded    — the camera-mesh shard_map + pipelined (deferred-harvest,
+                 donated-buffer) slot loop; identical to `batched` when only
+                 one device is visible.
+
+Reports wall-clock speedups, the max utility-log deviation of each batched
+mode vs sequential (must be ~1e-6 — all modes draw identical PRNG keys), and
+the number of fleet-executable compiles observed DURING the timed run
+(must be 0: the executable is compiled once per (method, config) at warmup).
+Run under ``REPRO_FAKE_DEVICES=8`` (or an XLA host-device flag) to see the
+sharded mode actually fan out.
 """
 from __future__ import annotations
 
@@ -22,42 +33,74 @@ import numpy as np
 from benchmarks.common import profiled_system
 from repro.data.synthetic import MultiCameraScene, SceneConfig, bandwidth_trace
 
+MODES = {
+    "sequential": dict(batched=False),
+    "batched": dict(batched=True, shard="off", pipeline=False, donate=False),
+    "sharded": dict(batched=True, shard="auto", pipeline=True, donate=True),
+}
+
 
 def _compare_modes(base, num_cameras: int = 8, n_slots: int = 6,
                    warmup_slots: int = 2) -> dict:
-    """Batched fleet slot-step vs sequential per-camera loop, same seeds."""
+    """Sequential vs PR1-batched vs sharded+pipelined, same seeds/keys."""
+    from repro.core import fleet as fleet_mod
     from repro.core.scheduler import DeepStreamSystem, SystemConfig
 
-    results = {}
-    for batched in (False, True):
+    results, compiles = {}, {}
+    for name, kw in MODES.items():
         cfg = SystemConfig(scene=SceneConfig(seed=31, num_cameras=num_cameras),
-                           eval_frames=base.cfg.eval_frames, batched=batched)
+                           eval_frames=base.cfg.eval_frames, **kw)
         sysd = DeepStreamSystem(cfg, base.light, base.server, base.mlp)
         sysd.tau_wl, sysd.tau_wh = base.tau_wl, base.tau_wh
         sysd.jcab_table = base.jcab_table
         # warm up compiles on a throwaway scene so steady-state is timed;
-        # both modes consume identical key counts, keeping streams aligned
+        # all modes consume identical key counts, keeping streams aligned
         sysd.run(MultiCameraScene(SceneConfig(seed=7, num_cameras=num_cameras)),
                  bandwidth_trace("medium", warmup_slots, seed=9),
                  method="deepstream")
+        n0 = fleet_mod.compile_count()
         scene = MultiCameraScene(SceneConfig(seed=13, num_cameras=num_cameras))
         trace = bandwidth_trace("medium", n_slots, seed=5)
         t0 = time.perf_counter()
         logs = sysd.run(scene, trace, method="deepstream")
         dt = time.perf_counter() - t0
-        results[batched] = (dt, logs)
+        results[name] = (dt, logs)
+        compiles[name] = fleet_mod.compile_count() - n0
 
-    t_seq, logs_seq = results[False]
-    t_bat, logs_bat = results[True]
-    udiff = float(np.max(np.abs(logs_seq["utility"] - logs_bat["utility"])))
+    t_seq, logs_seq = results["sequential"]
+    t_bat, logs_bat = results["batched"]
+    t_shr, logs_shr = results["sharded"]
+    udiff_bat = float(np.max(np.abs(logs_seq["utility"] - logs_bat["utility"])))
+    udiff_shr = float(np.max(np.abs(logs_seq["utility"] - logs_shr["utility"])))
     return {
         "num_cameras": num_cameras,
         "slots": n_slots,
+        "devices": jax.device_count(),
+        "mode_configs": MODES,       # the SystemConfig overrides each ran
         "sequential_ms_per_slot": t_seq / n_slots * 1e3,
         "batched_ms_per_slot": t_bat / n_slots * 1e3,
-        "speedup": t_seq / t_bat,
-        "max_utility_diff": udiff,
+        "sharded_ms_per_slot": t_shr / n_slots * 1e3,
+        "speedup_batched_vs_sequential": t_seq / t_bat,
+        "speedup_sharded_vs_batched": t_bat / t_shr,
+        "speedup_sharded_vs_sequential": t_seq / t_shr,
+        "max_utility_diff_batched": udiff_bat,
+        "max_utility_diff_sharded": udiff_shr,
+        "fleet_compiles_during_run": compiles,
     }
+
+
+def _print_cmp(cmp: dict) -> None:
+    print(f"\n[fleet] slot-step modes (C={cmp['num_cameras']}, "
+          f"{cmp['slots']} slots, {cmp['devices']} device(s)):")
+    print(f"  sequential {cmp['sequential_ms_per_slot']:9.1f} ms/slot")
+    print(f"  batched    {cmp['batched_ms_per_slot']:9.1f} ms/slot   "
+          f"({cmp['speedup_batched_vs_sequential']:.2f}x vs sequential, "
+          f"udiff {cmp['max_utility_diff_batched']:.1e})")
+    print(f"  sharded    {cmp['sharded_ms_per_slot']:9.1f} ms/slot   "
+          f"({cmp['speedup_sharded_vs_batched']:.2f}x vs batched, "
+          f"udiff {cmp['max_utility_diff_sharded']:.1e})")
+    print(f"  fleet compiles during timed runs: "
+          f"{cmp['fleet_compiles_during_run']}")
 
 
 def run(quick: bool = False) -> dict:
@@ -74,18 +117,21 @@ def run(quick: bool = False) -> dict:
         stages[k] = float(np.mean(v) * 1e3)
     stages["transmission"] = float(np.mean(trans) * 1e3)
 
-    print("\n[Fig.6] per-stage latency (ms, host-relative):")
+    print("\n[Fig.6] per-stage latency (ms, host-relative; fleet/roidet are "
+          "dispatch times in pipelined mode):")
     for k, v in sorted(stages.items(), key=lambda kv: -kv[1]):
         print(f"  {k:12s} {v:9.2f}")
 
-    cmp = _compare_modes(sysd, num_cameras=8, n_slots=4 if quick else 8)
-    print("\n[fleet] batched vs sequential slot-step "
-          f"(C={cmp['num_cameras']}, {cmp['slots']} slots):")
-    print(f"  sequential {cmp['sequential_ms_per_slot']:9.1f} ms/slot")
-    print(f"  batched    {cmp['batched_ms_per_slot']:9.1f} ms/slot")
-    print(f"  speedup    {cmp['speedup']:9.2f}x   "
-          f"max |utility diff| {cmp['max_utility_diff']:.2e}")
-    return {"stages_ms": stages, "fleet_comparison": cmp,
-            "headline": ("; ".join(f"{k}={v:.1f}ms" for k, v in stages.items())
-                         + f"; fleet speedup {cmp['speedup']:.2f}x @C=8"
-                         + f" (udiff {cmp['max_utility_diff']:.1e})")}
+    cmp8 = _compare_modes(sysd, num_cameras=8, n_slots=4 if quick else 8)
+    _print_cmp(cmp8)
+    out = {"stages_ms": stages, "fleet_comparison": cmp8,
+           "headline": (f"sharded {cmp8['speedup_sharded_vs_batched']:.2f}x "
+                        f"vs batched, {cmp8['speedup_sharded_vs_sequential']:.2f}x "
+                        f"vs sequential @C=8/{cmp8['devices']}dev "
+                        f"(udiff {cmp8['max_utility_diff_sharded']:.1e}, "
+                        f"compiles {sum(cmp8['fleet_compiles_during_run'].values())})")}
+    if not quick:
+        cmp16 = _compare_modes(sysd, num_cameras=16, n_slots=4)
+        _print_cmp(cmp16)
+        out["fleet_comparison_c16"] = cmp16
+    return out

@@ -3,13 +3,18 @@
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME ...]
 
 Prints ``name,us_per_call,derived`` CSV rows plus per-benchmark result tables,
-and writes JSON artifacts to ``artifacts/bench/``.
+and writes JSON artifacts to ``artifacts/bench/``.  Each artifact records the
+execution environment (host device count, platform, fake-device override,
+fleet sharding/donation modes) so sharded and single-device runs are
+distinguishable after the fact.  Set ``REPRO_FAKE_DEVICES=8`` to fan the CPU
+host out into 8 XLA devices (the `make ci-sharded` lane).
 """
 from __future__ import annotations
 
 import argparse
 import importlib
 import json
+import os
 import sys
 import time
 from pathlib import Path
@@ -26,6 +31,28 @@ BENCHES = [
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
 
+def _env_metadata() -> dict:
+    """Device/sharding provenance stamped into every bench artifact.
+    Imported lazily so REPRO_FAKE_DEVICES can take effect first.
+
+    ``system_defaults`` records the SystemConfig defaults a bench inherits
+    when it does not override them — benches that deliberately sweep modes
+    (bench_latency's sequential/batched/sharded comparison) record the
+    per-mode configs in their own result dict."""
+    import jax
+    from repro.core.scheduler import SystemConfig
+    cfg = SystemConfig()
+    fake = os.environ.get("REPRO_FAKE_DEVICES")
+    return {
+        "device_count": jax.device_count(),   # what actually ran
+        "platform": jax.default_backend(),
+        "requested_fake_devices": int(fake) if fake else None,
+        "system_defaults": {"shard": cfg.shard, "donate": cfg.donate,
+                            "pipeline": cfg.pipeline,
+                            "batched": cfg.batched},
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -33,7 +60,25 @@ def main() -> None:
     ap.add_argument("--only", nargs="*", default=None)
     args = ap.parse_args()
 
+    # must happen before anything imports jax; append to (rather than skip
+    # on) pre-existing XLA_FLAGS so the fake-device request is never
+    # silently ignored — if XLA_FLAGS already pins a host device count, that
+    # wins, and we say so (env metadata records the device count that ran)
+    fake = os.environ.get("REPRO_FAKE_DEVICES")
+    if fake:
+        flag = f"--xla_force_host_platform_device_count={int(fake)}"
+        existing = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in existing:
+            os.environ["XLA_FLAGS"] = (existing + " " + flag).strip()
+        else:
+            print(f"# REPRO_FAKE_DEVICES={fake} ignored: XLA_FLAGS already "
+                  "pins a host device count", file=sys.stderr)
+
     ART.mkdir(parents=True, exist_ok=True)
+    env_meta = _env_metadata()
+    print(f"# devices={env_meta['device_count']} "
+          f"platform={env_meta['platform']} "
+          f"defaults={env_meta['system_defaults']}")
     names = args.only or BENCHES
     print("name,us_per_call,derived")
     for name in names:
@@ -43,6 +88,7 @@ def main() -> None:
         dt = (time.perf_counter() - t0) * 1e6
         derived = result.get("headline", "")
         print(f"{name},{dt:.0f},{derived}", flush=True)
+        result["env"] = env_meta
         (ART / f"{name}.json").write_text(json.dumps(result, indent=2,
                                                      default=str))
 

@@ -15,15 +15,17 @@ Per video segment (N frames from a static camera):
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import cc
 from repro.kernels.edge_motion import ops as em_ops
 from repro.models import detector as det
+from repro.sharding.rules import cached_sharded_jit, pad_cameras, pad_leading
 
 
 class ROIResult(NamedTuple):
@@ -38,18 +40,23 @@ class ROIResult(NamedTuple):
 
 def _boxes_to_mask(boxes: jax.Array, valid: jax.Array, M: int, N: int,
                    scale: float = 1.0) -> jax.Array:
-    """Rasterize (K,4) xyxy boxes (optionally pixel->block scaled) onto (M,N)."""
+    """Rasterize (K,4) xyxy boxes (optionally pixel->block scaled) onto (M,N).
+
+    Accumulates box-by-box with a ``fori_loop`` | OR instead of vmapping to a
+    (K, M, N) stack + ``jnp.any`` — the stack was the C-batched path's
+    peak-memory hotspot ((C, K, M, N) live at once under vmap)."""
     rows = jnp.arange(M)[:, None]
     colsg = jnp.arange(N)[None, :]
 
-    def one(box, v):
-        x0, y0, x1, y1 = [box[i].astype(jnp.float32) * scale for i in range(4)]
+    def body(i, acc):
+        x0, y0, x1, y1 = [boxes[i, j].astype(jnp.float32) * scale
+                          for j in range(4)]
         m = ((rows >= jnp.floor(y0)) & (rows < jnp.ceil(y1)) &
              (colsg >= jnp.floor(x0)) & (colsg < jnp.ceil(x1)))
-        return jnp.where(v, m, False)
+        return acc | (m & valid[i])
 
-    masks = jax.vmap(one)(boxes, valid)
-    return jnp.any(masks, axis=0)
+    return jax.lax.fori_loop(0, boxes.shape[0], body,
+                             jnp.zeros((M, N), bool))
 
 
 def _roi_union(D: jax.Array, dboxes: jax.Array, dvalid: jax.Array, M: int,
@@ -107,20 +114,10 @@ def roidet(frames: jax.Array, det_params: Any, *, block_size: int = 8,
                      det_boxes=dboxes, det_valid=dvalid)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "block_size", "use_kernel", "max_boxes", "motion_thresh", "edge_thresh",
-    "conf_thresh"))
-def roidet_fleet(frames: jax.Array, det_params: Any, *, block_size: int = 8,
-                 motion_thresh: float = 16.0, edge_thresh: float = 0.35,
-                 conf_thresh: float = 0.25, use_kernel: bool = True,
-                 max_boxes: int = 16) -> ROIResult:
-    """Fleet ROIDet: frames (C, N, H, W) -> camera-batched ROIResult.
-
-    Same math as vmapping ``roidet`` over cameras, restructured so the light
-    detector runs ONE (2C,H,W) forward and motion runs ONE pallas grid over
-    all C*(N-1) frame pairs (``segment_motion_fleet``) — a single dispatch
-    per slot for the whole camera side.
-    """
+def _roidet_fleet_impl(frames: jax.Array, det_params: Any, *, block_size: int,
+                       motion_thresh: float, edge_thresh: float,
+                       conf_thresh: float, use_kernel: bool,
+                       max_boxes: int) -> ROIResult:
     C, N_f, H, W = frames.shape
     M, N = H // block_size, W // block_size
 
@@ -147,6 +144,38 @@ def roidet_fleet(frames: jax.Array, det_params: Any, *, block_size: int = 8,
     return ROIResult(mask=mask, area_ratio=area, confidence=conf,
                      motion_boxes=mboxes, motion_valid=mvalid,
                      det_boxes=dboxes, det_valid=dvalid)
+
+
+def roidet_fleet(frames: jax.Array, det_params: Any, *, block_size: int = 8,
+                 motion_thresh: float = 16.0, edge_thresh: float = 0.35,
+                 conf_thresh: float = 0.25, use_kernel: bool = True,
+                 max_boxes: int = 16, mesh: Optional[Mesh] = None
+                 ) -> ROIResult:
+    """Fleet ROIDet: frames (C, N, H, W) -> camera-batched ROIResult.
+
+    Same math as vmapping ``roidet`` over cameras, restructured so the light
+    detector runs ONE (2C,H,W) forward and motion runs ONE pallas grid over
+    all C*(N-1) frame pairs (``segment_motion_fleet``) — a single dispatch
+    per slot for the whole camera side.
+
+    With ``mesh`` (a ("camera",) mesh), the whole thing is shard_map'd over
+    the camera axis: each device runs the identical per-camera program on its
+    C/D shard, bit-stable vs the single-device path (C padded with inert
+    zero cameras when not divisible, sliced back off).
+    """
+    cam = P("camera")
+    fn = cached_sharded_jit(
+        _roidet_fleet_impl,
+        dict(block_size=block_size, motion_thresh=motion_thresh,
+             edge_thresh=edge_thresh, conf_thresh=conf_thresh,
+             use_kernel=use_kernel, max_boxes=max_boxes),
+        mesh, in_specs=(cam, P()), out_specs=ROIResult(*(cam,) * 7))
+    C = frames.shape[0]
+    C_pad = pad_cameras(C, mesh)
+    out = fn(pad_leading(frames, C_pad), det_params)
+    if C_pad != C:
+        out = ROIResult(*(x[:C] for x in out))
+    return out
 
 
 def full_frame_mask(num_cameras: int, H: int, W: int, block_size: int

@@ -8,15 +8,23 @@ Per time slot:
   sum_i lambda_i F1_i.
 
 Two execution modes (``SystemConfig.batched``):
-  * batched (default) — the fleet slot-step: ONE compiled
-    encode->detect->score program over the camera axis
-    (``core.fleet.fleet_encode_detect_score``), one dispatch and one
-    ``block_until_ready`` per slot instead of C x (encode + detect) host
-    round-trips.  ``profile()`` likewise batches the (camera x bitrate x
-    resolution) sweep.
+  * batched (default) — the sharded, sync-free fleet slot-step: ONE compiled
+    encode->detect->score->reuse-mix program over the camera axis
+    (``core.fleet.fleet_slot_step``) shared by ALL methods (deepstream,
+    jcab, reducto, static — method routing is data, not Python branches), so
+    ``run()`` compiles the fleet executable once per (method, config).  The
+    slot loop is pipelined: per slot the host fetches only the packed
+    (a_i, c_i) scalars the allocator/elastic controller needs (one D2H
+    transfer) plus the previous slot's packed (F1, sizes) — slot t+1's
+    ROIDet dispatches while slot t's scores are still in flight
+    (``SystemConfig.pipeline``).  With >1 device the camera axis is
+    shard_map'd over a ("camera",) mesh and the big per-slot buffers are
+    donated (``SystemConfig.shard`` / ``donate``).
   * sequential — the original per-camera Python loop, kept as the
     equivalence/benchmark baseline.  Both modes consume PRNG keys in the
-    same order, so F1/size logs agree within float tolerance.
+    same order, so F1/size logs agree within float tolerance — including
+    reducto, whose sequential arm encodes fixed-shape segments with a traced
+    kept-frame count so both arms draw identical coding noise.
 
 Baselines (section 7.2):
   * reducto  — on-camera frame filtering (low-level feature deltas) + fair
@@ -49,6 +57,20 @@ from repro.core.elastic import ElasticConfig, ElasticState
 from repro.data.synthetic import MultiCameraScene, SceneConfig
 from repro.kernels.edge_motion import ops as em_ops
 from repro.models import detector as det
+from repro.sharding import rules as shard_rules
+
+
+# block-motion mass above which a frame counts as "changed" (reducto keep
+# rule) — shared by the sequential and fleet paths, which must stay bit-in-
+# sync for the batched-vs-sequential <=1e-6 equivalence guarantee
+MOTION_KEEP_THRESH = 25.0
+
+
+def _motion_keep(score_sums: np.ndarray) -> np.ndarray:
+    """(..., N-1) per-pair motion-score sums -> (..., N) keep flags; the
+    first frame of a segment is always kept."""
+    lead = np.ones(score_sums.shape[:-1] + (1,), bool)
+    return np.concatenate([lead, score_sums > MOTION_KEEP_THRESH], axis=-1)
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
@@ -72,6 +94,9 @@ class SystemConfig:
     eval_frames: int = 4                      # frames scored per segment
     use_kernels: bool = True
     batched: bool = True                      # fleet slot-step vs Python loop
+    shard: str = "auto"                       # "auto": camera mesh if >1 dev
+    pipeline: bool = True                     # deferred-harvest slot loop
+    donate: bool = True                       # donate per-slot fleet buffers
 
     def lam(self) -> np.ndarray:
         if self.weights is None:
@@ -91,6 +116,13 @@ class DeepStreamSystem:
         self.jcab_table: Optional[np.ndarray] = None   # (J, R) content-agnostic F1
         self._key = jax.random.PRNGKey(1234)
         self.timers: Dict[str, List[float]] = {}
+        self.mesh = (shard_rules.camera_mesh()
+                     if cfg.batched and cfg.shard == "auto" else None)
+        # GT padding capacity fixed ONCE per scene config: deriving it from
+        # each slot's max GT count silently recompiled the fleet executable
+        # whenever the max crossed a multiple of 8
+        self._G = fleet_mod.gt_capacity(
+            cfg.scene.max_objects + cfg.scene.num_stationary)
 
     # -- small utilities ------------------------------------------------------
 
@@ -109,13 +141,17 @@ class DeepStreamSystem:
 
     # -- camera side -----------------------------------------------------------
 
-    def camera_features(self, frames_c: np.ndarray):
-        """frames_c (C, N, H, W) -> ROIResult batch (fleet ROIDet)."""
+    def camera_features(self, frames_c: np.ndarray, block: bool = True):
+        """frames_c (C, N, H, W) -> ROIResult batch (fleet ROIDet, sharded
+        over the camera mesh when one exists).  ``block=False`` skips the
+        device sync — the pipelined slot loop fetches only the packed (a, c)
+        scalars it needs."""
         t0 = time.perf_counter()
         res = roidet_mod.roidet_fleet(
             jnp.asarray(frames_c), self.light, block_size=self.cfg.block_size,
-            use_kernel=self.cfg.use_kernels)
-        jax.block_until_ready(res.mask)
+            use_kernel=self.cfg.use_kernels, mesh=self.mesh)
+        if block:
+            jax.block_until_ready(res.mask)
         self._t("roidet", t0)
         return res
 
@@ -161,20 +197,23 @@ class DeepStreamSystem:
 
     # -- server-side evaluation: batched fleet path ------------------------------
 
-    def fleet_encode_eval(self, frames: np.ndarray, gts: List[List[List[Tuple]]],
-                          masks: Optional[jax.Array], b: np.ndarray,
-                          r: np.ndarray, *, keys: Optional[jax.Array] = None,
-                          n_eff: Optional[np.ndarray] = None,
-                          eval_idx: Optional[np.ndarray] = None
-                          ) -> Tuple[np.ndarray, np.ndarray, fleet_mod.FleetEval]:
-        """Whole-fleet encode->detect->score in one compiled call.
+    def _slot_dispatch(self, frames, gts, masks, b: np.ndarray, r: np.ndarray,
+                       *, keys=None, n_eff=None, eval_idx=None, eval_w=None,
+                       reuse: Optional[Dict[str, np.ndarray]] = None,
+                       with_reuse: bool = True) -> fleet_mod.FleetSlotOut:
+        """Dispatch the unified fleet slot-step WITHOUT blocking.
 
-        frames (C,N,H,W) np; gts[cam][frame] GT lists; masks (C,M,Nb) bool or
-        None (no cropping); b, r (C,).  Returns (per-frame F1s (C, F),
-        sizes (C,), raw FleetEval) — callers average F1 frames (reducto
-        weights by kept counts).
+        frames (C,N,H,W); gts[cam][frame] GT lists; masks (C,M,Nb) bool or
+        None (no cropping); b, r (C,).  ``reuse`` carries the reducto
+        detection-reuse arm inputs (``fleet.neutral_reuse_inputs`` shape,
+        w_keep=1 turns the arm off for every other method).  ``run()`` keeps
+        ``with_reuse=True`` so all methods share ONE executable; the
+        profiling sweep (its batch shape is a separate specialization anyway)
+        drops the arm's dead work with ``with_reuse=False``.
         """
         C, N = frames.shape[:2]
+        F = self.cfg.eval_frames if eval_idx is None else eval_idx.shape[1]
+        F = min(F, N)
         if masks is None:
             masks = roidet_mod.full_frame_mask(
                 C, frames.shape[2], frames.shape[3], self.cfg.block_size)
@@ -183,18 +222,43 @@ class DeepStreamSystem:
         if eval_idx is None:
             eval_idx = np.repeat(
                 fleet_mod.eval_indices(N, self.cfg.eval_frames)[None], C, 0)
+        if eval_w is None:
+            eval_w = fleet_mod.uniform_eval_weights(C, eval_idx.shape[1])
         n_eff_arr = (jnp.full((C,), N, jnp.float32) if n_eff is None
                      else jnp.asarray(n_eff, jnp.float32))
-        gt_boxes, gt_valid = fleet_mod.pad_gt(gts, eval_idx)
+        if reuse is None:
+            reuse = fleet_mod.neutral_reuse_inputs(C, F, self._G, N)
+        gt_boxes, gt_valid = fleet_mod.pad_gt(gts, eval_idx, G=self._G)
         t0 = time.perf_counter()
-        out = fleet_mod.fleet_encode_detect_score(
+        out = fleet_mod.fleet_slot_step(
             self.cfg.codec, self.server, jnp.asarray(frames),
             jnp.asarray(masks), jnp.asarray(b, jnp.float32),
             jnp.asarray(r, jnp.float32), keys, n_eff_arr,
-            jnp.asarray(eval_idx, jnp.int32), jnp.asarray(gt_boxes),
-            jnp.asarray(gt_valid), block_size=self.cfg.block_size)
-        jax.block_until_ready(out.f1_frames)
+            jnp.asarray(eval_idx, jnp.int32), jnp.asarray(eval_w, jnp.float32),
+            jnp.asarray(gt_boxes), jnp.asarray(gt_valid),
+            jnp.asarray(reuse["reuse_idx"], jnp.int32),
+            jnp.asarray(reuse["miss_boxes"]), jnp.asarray(reuse["miss_valid"]),
+            jnp.asarray(reuse["miss_w"]), jnp.asarray(reuse["w_keep"]),
+            block_size=self.cfg.block_size, mesh=self.mesh,
+            donate=self.cfg.donate, with_reuse=with_reuse)
         self._t("fleet", t0)
+        return out
+
+    def fleet_encode_eval(self, frames: np.ndarray, gts: List[List[List[Tuple]]],
+                          masks: Optional[jax.Array], b: np.ndarray,
+                          r: np.ndarray, *, keys: Optional[jax.Array] = None,
+                          n_eff: Optional[np.ndarray] = None,
+                          eval_idx: Optional[np.ndarray] = None
+                          ) -> Tuple[np.ndarray, np.ndarray, fleet_mod.FleetSlotOut]:
+        """Whole-fleet encode->detect->score in one compiled call (blocking
+        variant used by profiling and tests; no reuse arm).  Returns
+        (per-frame F1s (C, F), sizes (C,), raw FleetSlotOut)."""
+        out = self._slot_dispatch(frames, gts, masks, b, r, keys=keys,
+                                  n_eff=n_eff, eval_idx=eval_idx,
+                                  with_reuse=False)
+        t0 = time.perf_counter()
+        jax.block_until_ready(out.host_pack)
+        self._t("fleet_sync", t0)
         return np.asarray(out.f1_frames), np.asarray(out.sizes), out
 
     # -- offline profiling (section 5.1 + 5.3.1b) --------------------------------
@@ -258,8 +322,9 @@ class DeepStreamSystem:
         Evaluates the full (camera x bitrate x resolution) x {masked, full}
         grid in J fleet calls of C*R*2 entries each (chunked on the bitrate
         axis to bound decoded-segment memory) instead of C*J*R*2 sequential
-        encode_eval round-trips.  Key draw order matches the sequential
-        nesting (camera, bitrate, resolution, masked-then-full) exactly.
+        encode_eval round-trips; each fleet call shards its entry axis over
+        the camera mesh.  Key draw order matches the sequential nesting
+        (camera, bitrate, resolution, masked-then-full) exactly.
         Returns (masked_f1 (C,J,R), full_f1 (C,J,R)).
         """
         cfgc = self.cfg.codec
@@ -295,6 +360,14 @@ class DeepStreamSystem:
 
     # -- reducto helpers ---------------------------------------------------------
 
+    def _kept_eval_selection(self, keep_i: np.ndarray
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """One camera's keep flags (N,) -> (kept frame indices, the subset of
+        them scored for F1) — the selection both execution modes share."""
+        kept_idx = np.flatnonzero(keep_i)
+        sel = fleet_mod.eval_indices(len(kept_idx), self.cfg.eval_frames)
+        return kept_idx, kept_idx[sel]
+
     def _reuse_f1(self, dets: Tuple[np.ndarray, np.ndarray],
                   gts_missed: List[List[Tuple]]) -> float:
         """Score filtered-out frames against the reused last detections."""
@@ -304,76 +377,191 @@ class DeepStreamSystem:
         return float(np.mean([det.f1_score(boxes, valid, gts_missed[j])
                               for j in sel]))
 
+    def _reducto_fleet_inputs(self, frames: np.ndarray, gts,
+                              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                         Dict[str, np.ndarray]]:
+        """Host-side reducto prep for the unified slot-step: motion filtering
+        (one sharded kernel grid, ONE packed (C, N-1) fetch), kept/missed
+        eval-frame selections and the traced reuse-arm weights.
+        Returns (n_eff, eval_idx, eval_w, reuse_inputs)."""
+        C, N = frames.shape[:2]
+        F = min(self.cfg.eval_frames, N)
+        sc = em_ops.segment_motion_fleet(
+            jnp.asarray(frames), block_size=self.cfg.block_size,
+            use_kernel=self.cfg.use_kernels, mesh=self.mesh)  # (C,N-1,M,Nb)
+        keep = _motion_keep(np.asarray(jnp.sum(sc, axis=(2, 3))))  # 1 fetch
+        n_eff = keep.sum(axis=1).astype(np.float32)
+        eval_idx = np.zeros((C, F), np.int64)
+        m_per_cam = np.zeros(C, np.int64)
+        miss_sel = np.zeros((C, F), np.int64)
+        miss_w = np.zeros((C, F), np.float32)
+        w_keep = np.ones(C, np.float32)
+        reuse_idx = np.zeros(C, np.int32)
+        for i in range(C):
+            kept_idx, ev = self._kept_eval_selection(keep[i])
+            m = len(ev)
+            eval_idx[i, :m] = ev
+            eval_idx[i, m:] = ev[-1]
+            m_per_cam[i] = m
+            reuse_idx[i] = kept_idx[-1]
+            miss_idx = np.flatnonzero(~keep[i])
+            if len(miss_idx):
+                msel = fleet_mod.eval_indices(len(miss_idx),
+                                              self.cfg.eval_frames)
+                miss_sel[i, :len(msel)] = miss_idx[msel]
+                miss_w[i, :len(msel)] = 1.0 / len(msel)
+                w_keep[i] = keep[i].mean()
+        eval_w = fleet_mod.uniform_eval_weights(C, F, m_per_cam)
+        miss_boxes, miss_valid = fleet_mod.pad_gt(gts, miss_sel, G=self._G)
+        reuse = dict(reuse_idx=reuse_idx, miss_boxes=miss_boxes,
+                     miss_valid=miss_valid, miss_w=miss_w, w_keep=w_keep)
+        return n_eff, eval_idx, eval_w, reuse
+
     # -- online loop -------------------------------------------------------------
 
     def run(self, scene: MultiCameraScene, trace_kbps: np.ndarray,
             method: str = "deepstream", use_elastic: Optional[bool] = None
             ) -> Dict[str, np.ndarray]:
+        if use_elastic is None:
+            use_elastic = method == "deepstream"
+        if self.cfg.batched:
+            return self._run_batched(scene, trace_kbps, method, use_elastic)
+        return self._run_sequential(scene, trace_kbps, method, use_elastic)
+
+    def _slot_allocation(self, method: str, frames: np.ndarray, W_t: float,
+                         est: ElasticState, use_elastic: bool
+                         ) -> Tuple[np.ndarray, np.ndarray,
+                                    Optional[jax.Array], float, float, float,
+                                    ElasticState]:
+        """Per-slot method routing shared by both execution modes: content
+        features (deepstream only) -> elastic -> allocation.
+        Returns (b, r, masks, extra, area, alloc_kbps, est)."""
         cfgc = self.cfg.codec
         lam = self.cfg.lam()
         C = self.cfg.scene.num_cameras
         bitrates = list(cfgc.bitrates_kbps)
-        if use_elastic is None:
-            use_elastic = method == "deepstream"
+        masks = None
+        extra = area = 0.0
+
+        if method in ("deepstream", "deepstream_no_elastic"):
+            roi = self.camera_features(frames, block=not self.cfg.batched)
+            # the ONE camera-side sync: packed (a_i, c_i) scalars
+            ac = np.asarray(jnp.stack([roi.area_ratio, roi.confidence]))
+            a, c = ac[0], ac[1]
+            area = float(a.sum())
+            if use_elastic:
+                est, extra_kbits, _ = elastic_mod.update(
+                    self.cfg.elastic, est, area, W_t,
+                    self.tau_wl, self.tau_wh)
+                extra = extra_kbits / cfgc.slot_seconds   # Kbps-equivalent
+            t0 = time.perf_counter()
+            util, best_res = alloc.build_utility_table(
+                self.mlp, a, c, bitrates, cfgc.resolutions, lam)
+            al = alloc.allocate_dp(util, best_res, bitrates,
+                                   max(W_t + extra, bitrates[0]),
+                                   use_kernel=self.cfg.use_kernels)
+            self._t("alloc", t0)
+            b, r = al.bitrates_kbps, al.resolutions
+            masks = roi.mask
+            alloc_kbps = float(al.bitrates_kbps.sum())
+
+        elif method == "jcab":
+            # content-agnostic table: same for every camera, weighted
+            jt = self.jcab_table                          # (J, R)
+            util = np.repeat(jt.max(-1)[None], C, 0) * lam[:, None]
+            best_res = np.repeat(np.asarray(
+                cfgc.resolutions, np.float32)[jt.argmax(-1)][None], C, 0)
+            al = alloc.allocate_dp(util.astype(np.float32), best_res,
+                                   bitrates, W_t,
+                                   use_kernel=self.cfg.use_kernels)
+            b, r = al.bitrates_kbps, al.resolutions
+            alloc_kbps = float(al.bitrates_kbps.sum())
+
+        elif method in ("reducto", "static"):
+            b = alloc.allocate_fair(bitrates, W_t, C)
+            r = np.ones(C)
+            alloc_kbps = float(np.sum(b))
+        else:
+            raise ValueError(method)
+        return b, r, masks, extra, area, alloc_kbps, est
+
+    def _run_batched(self, scene: MultiCameraScene, trace_kbps: np.ndarray,
+                     method: str, use_elastic: bool) -> Dict[str, np.ndarray]:
+        """Pipelined fleet loop: every method routes through ONE compiled
+        slot-step; per slot the host syncs only on the packed content
+        features it needs for allocation, and slot t's (F1, sizes) pack is
+        harvested while slot t+1 is already in flight."""
+        lam = self.cfg.lam()
+        C = self.cfg.scene.num_cameras
         est = ElasticState()
         logs = {k: [] for k in ("utility", "mean_f1", "bytes", "W", "extra",
                                 "alloc_kbps", "area")}
-        prev_dets: List[Optional[Tuple]] = [None] * C
+
+        def harvest(out: fleet_mod.FleetSlotOut) -> None:
+            t0 = time.perf_counter()
+            pack = np.asarray(out.host_pack)      # ONE (2, C) D2H transfer
+            self._t("harvest", t0)
+            logs["utility"].append(float(np.dot(lam, pack[0])))
+            logs["mean_f1"].append(float(np.mean(pack[0])))
+            logs["bytes"].append(float(np.sum(pack[1])))
+
+        pending: Optional[fleet_mod.FleetSlotOut] = None
+        for t in range(len(trace_kbps)):
+            W_t = float(trace_kbps[t])
+            seg = scene.segment()
+            gts = seg["boxes"]
+            # ONE H2D upload per slot: ROIDet/motion and the slot-step all
+            # consume this device array (their jnp.asarray is then a no-op);
+            # they dispatch before the slot-step donates it, and the next
+            # slot uploads a fresh segment
+            frames = jnp.asarray(seg["frames"])
+            keys = self._keys(C)
+            b, r, masks, extra, area, alloc_kbps, est = self._slot_allocation(
+                method, frames, W_t, est, use_elastic)
+            n_eff = eval_idx = eval_w = reuse = None
+            if method == "reducto":
+                n_eff, eval_idx, eval_w, reuse = \
+                    self._reducto_fleet_inputs(frames, gts)
+
+            out = self._slot_dispatch(frames, gts, masks, b, r, keys=keys,
+                                      n_eff=n_eff, eval_idx=eval_idx,
+                                      eval_w=eval_w, reuse=reuse)
+            logs["extra"].append(extra)
+            logs["area"].append(area)
+            logs["alloc_kbps"].append(alloc_kbps)
+            logs["W"].append(W_t)
+            if pending is not None:
+                harvest(pending)
+            if self.cfg.pipeline:
+                pending = out
+            else:
+                harvest(out)
+        if pending is not None:
+            harvest(pending)
+        return {k: np.asarray(v) for k, v in logs.items()}
+
+    def _run_sequential(self, scene: MultiCameraScene, trace_kbps: np.ndarray,
+                        method: str, use_elastic: bool
+                        ) -> Dict[str, np.ndarray]:
+        lam = self.cfg.lam()
+        C = self.cfg.scene.num_cameras
+        est = ElasticState()
+        logs = {k: [] for k in ("utility", "mean_f1", "bytes", "W", "extra",
+                                "alloc_kbps", "area")}
 
         for t in range(len(trace_kbps)):
             W_t = float(trace_kbps[t])
             seg = scene.segment()
             frames, gts = seg["frames"], seg["boxes"]
-
-            if method in ("deepstream", "deepstream_no_elastic"):
-                roi = self.camera_features(frames)
-                a = np.asarray(roi.area_ratio)
-                c = np.asarray(roi.confidence)
-                extra = 0.0
-                if use_elastic:
-                    est, extra_kbits, _ = elastic_mod.update(
-                        self.cfg.elastic, est, float(a.sum()), W_t,
-                        self.tau_wl, self.tau_wh)
-                    extra = extra_kbits / cfgc.slot_seconds   # Kbps-equivalent
-                t0 = time.perf_counter()
-                util, best_res = alloc.build_utility_table(
-                    self.mlp, a, c, bitrates, cfgc.resolutions, lam)
-                al = alloc.allocate_dp(util, best_res, bitrates,
-                                       max(W_t + extra, bitrates[0]),
-                                       use_kernel=self.cfg.use_kernels)
-                self._t("alloc", t0)
-                f1s, sizes = self._encode_eval_all(
-                    frames, gts, roi.mask, al.bitrates_kbps, al.resolutions)
-                logs["extra"].append(extra)
-                logs["area"].append(float(a.sum()))
-                logs["alloc_kbps"].append(al.bitrates_kbps.sum())
-
-            elif method == "jcab":
-                # content-agnostic table: same for every camera, weighted
-                jt = self.jcab_table                          # (J, R)
-                util = np.repeat(jt.max(-1)[None], C, 0) * lam[:, None]
-                best_res = np.repeat(
-                    np.asarray(cfgc.resolutions, np.float32)[jt.argmax(-1)][None], C, 0)
-                al = alloc.allocate_dp(util.astype(np.float32), best_res,
-                                       bitrates, W_t,
-                                       use_kernel=self.cfg.use_kernels)
-                f1s, sizes = self._encode_eval_all(
-                    frames, gts, None, al.bitrates_kbps, al.resolutions)
-                logs["extra"].append(0.0); logs["area"].append(0.0)
-                logs["alloc_kbps"].append(al.bitrates_kbps.sum())
-
-            elif method in ("reducto", "static"):
-                bs = alloc.allocate_fair(bitrates, W_t, C)
-                if method == "reducto":
-                    f1s, sizes = self._reducto_slot(frames, gts, bs, prev_dets)
-                else:
-                    f1s, sizes = self._encode_eval_all(
-                        frames, gts, None, bs, np.ones(C))
-                logs["extra"].append(0.0); logs["area"].append(0.0)
-                logs["alloc_kbps"].append(float(np.sum(bs)))
+            b, r, masks, extra, area, alloc_kbps, est = self._slot_allocation(
+                method, frames, W_t, est, use_elastic)
+            if method == "reducto":
+                f1s, sizes = self._reducto_slot(frames, gts, b)
             else:
-                raise ValueError(method)
-
+                f1s, sizes = self._encode_eval_all(frames, gts, masks, b, r)
+            logs["extra"].append(extra)
+            logs["area"].append(area)
+            logs["alloc_kbps"].append(alloc_kbps)
             logs["utility"].append(float(np.dot(lam, f1s)))
             logs["mean_f1"].append(float(np.mean(f1s)))
             logs["bytes"].append(float(np.sum(sizes)))
@@ -387,12 +575,9 @@ class DeepStreamSystem:
                          gts: List[List[List[Tuple]]],
                          masks: Optional[jax.Array], b: np.ndarray,
                          r: np.ndarray) -> Tuple[List[float], List[float]]:
-        """All cameras' encode->detect->score: one fleet call (batched mode)
-        or the original per-camera loop (sequential mode)."""
+        """All cameras' encode->detect->score, one camera at a time (the
+        sequential reference; the batched loop dispatches ``_slot_dispatch``)."""
         C = frames.shape[0]
-        if self.cfg.batched:
-            f1f, sizes, _ = self.fleet_encode_eval(frames, gts, masks, b, r)
-            return list(f1f.mean(axis=1).astype(float)), list(sizes.astype(float))
         f1s, sizes = [], []
         for i in range(C):
             f1, size = self.encode_eval(
@@ -402,80 +587,49 @@ class DeepStreamSystem:
         return f1s, sizes
 
     def _reducto_slot(self, frames: np.ndarray, gts: List[List[List[Tuple]]],
-                      bs: np.ndarray, prev_dets: List[Optional[Tuple]]
-                      ) -> Tuple[List[float], List[float]]:
-        """Reducto baseline slot: edge-diff frame filtering + fair shares.
+                      bs: np.ndarray) -> Tuple[List[float], List[float]]:
+        """Sequential reducto baseline slot: edge-diff frame filtering + fair
+        shares, one camera at a time.
 
-        Batched mode runs motion filtering as one fleet kernel grid, encodes
-        all cameras in one fleet call (fixed-shape segments with traced kept
-        counts) and batches the detection-reuse forward; the filtered-frame
-        F1 mixing stays on the host.  Frame-filtered segments draw different
-        coding-noise samples than the sequential variable-length encode, so
-        reducto (a stochastic baseline) matches sequential in distribution
-        rather than bitwise.
+        Encodes the FIXED-SHAPE segment with a traced kept-frame count
+        (``num_frames``) and scores the kept frames through eval indices —
+        exactly the math the unified fleet program runs — so the batched path
+        reproduces this reference to float tolerance (both draw the same
+        coding-noise samples on the same-shaped arrays).
         """
         C, N = frames.shape[:2]
-        F = min(self.cfg.eval_frames, N)
-        if not self.cfg.batched:
-            f1s, sizes = [], []
-            for i in range(C):
-                fr = frames[i]
-                sc = em_ops.segment_motion(
-                    jnp.asarray(fr), block_size=self.cfg.block_size,
-                    use_kernel=self.cfg.use_kernels)
-                keep = np.concatenate(
-                    [[True], np.asarray(sc.sum((1, 2))) > 25.0])
-                kept = fr[keep]
-                f1, size = self.encode_eval(kept, [g for g, k in
-                                                   zip(gts[i], keep) if k],
-                                            None, bs[i], 1.0)
-                # filtered frames reuse previous detections
-                grid = det.forward(self.server, jnp.asarray(kept[-1:]))
-                b_, s_, v_ = det.decode_boxes(grid, conf_thresh=0.4)
-                prev_dets[i] = (np.asarray(b_[0]), np.asarray(v_[0]))
-                if not all(keep):
-                    miss_idx = [j for j, k in enumerate(keep) if not k]
-                    f1_re = self._reuse_f1(prev_dets[i],
-                                           [gts[i][j] for j in miss_idx])
-                    w_keep = keep.mean()
-                    f1 = f1 * w_keep + f1_re * (1 - w_keep)
-                f1s.append(f1); sizes.append(size)
-            return f1s, sizes
-
-        # ---- batched: one motion grid, one fleet encode, one reuse forward
-        sc = em_ops.segment_motion_fleet(
-            jnp.asarray(frames), block_size=self.cfg.block_size,
-            use_kernel=self.cfg.use_kernels)                 # (C, N-1, M, Nb)
-        keep = np.concatenate(
-            [np.ones((C, 1), bool), np.asarray(sc.sum((2, 3))) > 25.0], axis=1)
-        kept_counts = keep.sum(axis=1)                       # (C,)
-        eval_idx = np.zeros((C, F), np.int64)
-        m_per_cam = np.zeros(C, np.int64)
+        f1s, sizes = [], []
+        H, W = frames.shape[-2:]
         for i in range(C):
-            kept_idx = np.flatnonzero(keep[i])
-            sel = fleet_mod.eval_indices(len(kept_idx), self.cfg.eval_frames)
-            m_per_cam[i] = len(sel)
-            padded = np.concatenate(
-                [kept_idx[sel], np.full(F - len(sel), kept_idx[sel][-1])])
-            eval_idx[i] = padded
-        f1f, sizes, _ = self.fleet_encode_eval(
-            frames, gts, None, bs, np.ones(C), n_eff=kept_counts,
-            eval_idx=eval_idx)
-        # detection reuse: ONE forward over every camera's last kept frame
-        last_kept = frames[np.arange(C), np.array(
-            [np.flatnonzero(keep[i])[-1] for i in range(C)])]
-        grid = det.forward(self.server, jnp.asarray(last_kept))
-        b_, s_, v_ = det.decode_boxes(grid, conf_thresh=0.4)
-        b_, v_ = np.asarray(b_), np.asarray(v_)
-        f1s = []
-        for i in range(C):
-            prev_dets[i] = (b_[i], v_[i])
-            f1 = float(f1f[i, :m_per_cam[i]].mean())
-            if not keep[i].all():
-                miss_idx = np.flatnonzero(~keep[i])
-                f1_re = self._reuse_f1(prev_dets[i],
-                                       [gts[i][j] for j in miss_idx])
-                w_keep = keep[i].mean()
+            fr = frames[i]
+            sc = em_ops.segment_motion(
+                jnp.asarray(fr), block_size=self.cfg.block_size,
+                use_kernel=self.cfg.use_kernels)
+            keep = _motion_keep(np.asarray(sc.sum((1, 2))))
+            kept_idx, ev_idx = self._kept_eval_selection(keep)
+            t0 = time.perf_counter()
+            decoded, size = codec_mod.encode_segment(
+                self.cfg.codec, jnp.asarray(fr), jnp.float32(H * W),
+                jnp.float32(bs[i]), jnp.float32(1.0), self._nextkey(),
+                num_frames=jnp.float32(len(kept_idx)))
+            jax.block_until_ready(decoded)
+            self._t("compress", t0)
+            t0 = time.perf_counter()
+            grid = det.forward(self.server, decoded[ev_idx])
+            db, _, dv = det.decode_boxes(grid, conf_thresh=0.4)
+            db, dv = np.asarray(db), np.asarray(dv)
+            self._t("server", t0)
+            f1 = float(np.mean([det.f1_score(db[k], dv[k], gts[i][j])
+                                for k, j in enumerate(ev_idx)]))
+            # filtered frames reuse the last kept RAW frame's detections
+            # (within-slot reuse: the camera detects on what it transmits)
+            grid2 = det.forward(self.server, jnp.asarray(fr[kept_idx[-1:]]))
+            rb, _, rv = det.decode_boxes(grid2, conf_thresh=0.4)
+            dets = (np.asarray(rb[0]), np.asarray(rv[0]))
+            if not keep.all():
+                miss_idx = np.flatnonzero(~keep)
+                f1_re = self._reuse_f1(dets, [gts[i][j] for j in miss_idx])
+                w_keep = keep.mean()
                 f1 = f1 * w_keep + f1_re * (1 - w_keep)
-            f1s.append(f1)
-        return f1s, list(sizes.astype(float))
+            f1s.append(f1); sizes.append(float(size))
+        return f1s, sizes

@@ -2,13 +2,16 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import pallas_interpret_default
 from repro.kernels.edge_motion import ref
 from repro.kernels.edge_motion.edge_motion import edge_motion_pallas
+from repro.sharding.rules import cached_sharded_jit, pad_cameras, pad_leading
 
 INTERPRET = pallas_interpret_default()
 
@@ -41,17 +44,9 @@ def segment_motion(frames: jax.Array, *, block_size: int = 8,
     return out.reshape(P, T * th_b, w_b)
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "tile_rows", "use_kernel", "edge_thresh"))
-def segment_motion_fleet(frames: jax.Array, *, block_size: int = 8,
-                         edge_thresh: float = 0.35, tile_rows: int = 32,
-                         use_kernel: bool = True) -> jax.Array:
-    """Camera-batched variant: frames (C, N, H, W) -> (C, N-1, H/bs, W/bs).
-
-    Folds the camera axis into the kernel's pair axis so the whole fleet is
-    ONE pallas grid launch (C*(N-1), T) instead of C vmapped launches.
-    Bit-identical to vmapping ``segment_motion`` over cameras: each (pair,
-    tile) program is independent.
-    """
+def _segment_motion_fleet_impl(frames: jax.Array, *, block_size: int,
+                               edge_thresh: float, tile_rows: int,
+                               use_kernel: bool) -> jax.Array:
     C, N, H, W = frames.shape
     tile_rows = min(tile_rows, H)
     if not use_kernel:
@@ -64,5 +59,29 @@ def segment_motion_fleet(frames: jax.Array, *, block_size: int = 8,
                              tiles[:, 1:].reshape(pair_shape),
                              block_size=block_size, edge_thresh=edge_thresh,
                              interpret=INTERPRET)
-    P, T, th_b, w_b = out.shape
+    n_pairs, T, th_b, w_b = out.shape
     return out.reshape(C, N - 1, T * th_b, w_b)
+
+
+def segment_motion_fleet(frames: jax.Array, *, block_size: int = 8,
+                         edge_thresh: float = 0.35, tile_rows: int = 32,
+                         use_kernel: bool = True,
+                         mesh: Optional[Mesh] = None) -> jax.Array:
+    """Camera-batched variant: frames (C, N, H, W) -> (C, N-1, H/bs, W/bs).
+
+    Folds the camera axis into the kernel's pair axis so the whole fleet is
+    ONE pallas grid launch (C*(N-1), T) instead of C vmapped launches.
+    Bit-identical to vmapping ``segment_motion`` over cameras: each (pair,
+    tile) program is independent.  With ``mesh`` (a ("camera",) mesh) the
+    grid is shard_map'd over cameras — each device launches the kernel on its
+    C/D-camera shard (C padded with zero cameras when not divisible).
+    """
+    fn = cached_sharded_jit(
+        _segment_motion_fleet_impl,
+        dict(block_size=block_size, edge_thresh=edge_thresh,
+             tile_rows=tile_rows, use_kernel=use_kernel),
+        mesh, in_specs=P("camera"), out_specs=P("camera"))
+    C = frames.shape[0]
+    C_pad = pad_cameras(C, mesh)
+    out = fn(pad_leading(frames, C_pad))
+    return out[:C] if C_pad != C else out

@@ -14,9 +14,11 @@ Weight sharding strategy (Megatron TP x FSDP):
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.common.params import ParamDef, is_def
@@ -31,6 +33,75 @@ def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
     from jax.experimental.shard_map import shard_map
     return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                      check_rep=check)
+
+
+def camera_mesh(min_devices: int = 2) -> Optional[Mesh]:
+    """1-D ("camera",) mesh over every local device, or None below
+    ``min_devices`` (single-device runs skip shard_map entirely).
+
+    The fleet slot-step, fleet ROIDet and the profiling sweep all shard their
+    leading camera axis over this mesh; on CPU, 8 fake host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` exercise the same
+    code path a TPU slice would.
+    """
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) < min_devices:
+        return None
+    return Mesh(np.asarray(devs), ("camera",))
+
+
+def pad_cameras(n: int, mesh: Optional[Mesh]) -> int:
+    """Smallest multiple of the camera-mesh size >= n (n itself when
+    unsharded) — shard_map needs the leading axis divisible by the mesh."""
+    if mesh is None:
+        return n
+    d = mesh.shape["camera"]
+    return -(-n // d) * d
+
+
+def mesh_cache_key(mesh: Optional[Mesh]) -> Optional[Tuple[int, ...]]:
+    """Hashable identity of a mesh for executable caches (None = unsharded)."""
+    return None if mesh is None else tuple(d.id for d in mesh.devices.flat)
+
+
+def sharded_jit(impl, mesh: Optional[Mesh], in_specs, out_specs,
+                donate_argnums=(), check: bool = False):
+    """The one builder every fleet executable (slot-step, fleet ROIDet,
+    fleet motion) goes through: shard_map over the camera mesh when one is
+    given, then jit with optional buffer donation."""
+    if mesh is not None:
+        impl = shard_map_compat(impl, mesh, in_specs, out_specs, check)
+    return jax.jit(impl, donate_argnums=donate_argnums)
+
+
+_SHARDED_JIT_CACHE: dict = {}
+
+
+def cached_sharded_jit(fn, statics: dict, mesh: Optional[Mesh], in_specs,
+                       out_specs, donate_argnums=()):
+    """Get-or-build the ``sharded_jit`` of ``partial(fn, **statics)``, cached
+    per (fn, mesh, statics) so repeated wrapper calls reuse one executable.
+    ``fn`` must be a module-level function (stable identity) and every static
+    value hashable."""
+    key = (fn, mesh_cache_key(mesh), tuple(sorted(statics.items())),
+           tuple(donate_argnums))
+    got = _SHARDED_JIT_CACHE.get(key)
+    if got is None:
+        got = _SHARDED_JIT_CACHE[key] = sharded_jit(
+            functools.partial(fn, **statics), mesh, in_specs, out_specs,
+            donate_argnums)
+    return got
+
+
+def pad_leading(x, n: int, fill=0) -> jax.Array:
+    """Pad a camera-leading array to n rows with `fill` (inert cameras the
+    sharded executables compute and the wrappers slice back off)."""
+    x = jnp.asarray(x)
+    if x.shape[0] == n:
+        return x
+    pad = jnp.full((n - x.shape[0],) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
 
 # logical axis name -> mesh axis (or tuple of mesh axes)
 def rules(mesh: Mesh, fsdp_over_pod: bool = False, policy: str = "2d"):

@@ -3,8 +3,14 @@ import sys
 from pathlib import Path
 
 # tests must see 1 CPU device (the dry-run sets its own 512-device flag in a
-# subprocess); keep any user XLA_FLAGS out of the way.
+# subprocess); keep any user XLA_FLAGS out of the way.  The `make ci-sharded`
+# lane opts back in to N fake host devices via REPRO_FAKE_DEVICES so the whole
+# tier-1 suite exercises the camera-mesh shard_map paths.
 os.environ.pop("XLA_FLAGS", None)
+_fake = os.environ.get("REPRO_FAKE_DEVICES")
+if _fake:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={int(_fake)}")
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 

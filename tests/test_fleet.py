@@ -100,6 +100,67 @@ def test_run_static_batched_matches_sequential(sys_pair):
                                atol=1e-3)
 
 
+def test_run_reducto_batched_matches_sequential(sys_pair):
+    """The reuse arm folded into the unified fleet program reproduces the
+    sequential reducto reference (fixed-shape encode, traced kept counts,
+    reuse detections scored on filtered-out frames) to <= 1e-6."""
+    seq, bat = sys_pair
+    trace = bandwidth_trace("medium", 3, seed=6) * 3 / 5
+    logs = {}
+    for name, s in (("seq", seq), ("bat", bat)):
+        s._key = jax.random.PRNGKey(42)
+        scene = MultiCameraScene(SceneConfig(seed=19, num_cameras=3))
+        logs[name] = s.run(scene, trace, method="reducto")
+    np.testing.assert_allclose(logs["bat"]["utility"], logs["seq"]["utility"],
+                               atol=1e-6)
+    np.testing.assert_allclose(logs["bat"]["bytes"], logs["seq"]["bytes"],
+                               rtol=1e-6)
+
+
+def test_run_jcab_batched_matches_sequential(sys_pair):
+    seq, bat = sys_pair
+    trace = bandwidth_trace("medium", 3, seed=2) * 3 / 5
+    logs = {}
+    for name, s in (("seq", seq), ("bat", bat)):
+        s._key = jax.random.PRNGKey(7)
+        scene = MultiCameraScene(SceneConfig(seed=23, num_cameras=3))
+        logs[name] = s.run(scene, trace, method="jcab")
+    np.testing.assert_allclose(logs["bat"]["utility"], logs["seq"]["utility"],
+                               atol=1e-6)
+
+
+def test_fleet_compiles_once_across_methods(sys_pair):
+    """All four methods route through ONE fleet executable: after a warmup
+    run, further runs of every method must not trigger a single new compile
+    of the fleet slot-step (fixed GT capacity, fixed shapes)."""
+    import repro.core.fleet as fleet_mod
+    _, bat = sys_pair
+    trace = bandwidth_trace("medium", 2, seed=3) * 3 / 5
+    bat.run(MultiCameraScene(SceneConfig(seed=11, num_cameras=3)), trace,
+            method="deepstream")          # warmup compile
+    n0 = fleet_mod.compile_count()
+    for method in ("deepstream", "jcab", "static", "reducto"):
+        bat.run(MultiCameraScene(SceneConfig(seed=12, num_cameras=3)), trace,
+                method=method)
+    assert fleet_mod.compile_count() == n0
+
+
+def test_pad_gt_fixed_capacity():
+    """pad_gt uses a scene-fixed G (jit-signature-stable) and asserts on
+    overflow instead of silently growing (and recompiling)."""
+    import repro.core.fleet as fleet_mod
+    gts = [[[(0, 0, 4, 4)] * 3, [(1, 1, 5, 5)]]]       # 1 cam, 2 frames
+    idx = np.array([[0, 1]])
+    boxes, valid = fleet_mod.pad_gt(gts, idx, G=16)
+    assert boxes.shape == (1, 2, 16, 4) and valid.shape == (1, 2, 16)
+    assert valid[0, 0].sum() == 3 and valid[0, 1].sum() == 1
+    with pytest.raises(AssertionError):
+        fleet_mod.pad_gt(gts, idx, G=2)
+    assert fleet_mod.gt_capacity(10) == 16
+    assert fleet_mod.gt_capacity(17) == 24
+    assert fleet_mod.gt_capacity(24, min_boxes=8) == 24
+
+
 def test_f1_score_batch_matches_numpy(rng):
     """Traced greedy F1 == the numpy reference on random padded batches."""
     for trial in range(25):
