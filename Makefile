@@ -2,9 +2,14 @@
 # regressions (correctness or slot-step latency) are caught early.
 # `ci-sharded` replays the tier-1 suite + the quick latency bench under 8
 # fake XLA host devices, exercising the camera-mesh shard_map fleet paths.
+# `ci-guard` is the transfer-guard lane: the device-resident control loop's
+# timed slot loop runs under jax.transfer_guard_device_to_host("disallow")
+# (apart from the scoped per-slot log harvest) on the 8-device mesh, and the
+# D2H fetch counters prove zero per-slot control syncs on the CPU backend,
+# where the guard itself is zero-copy-inert.
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-quick ci ci-sharded
+.PHONY: test bench-quick ci ci-sharded ci-guard
 
 test:
 	$(PY) -m pytest -q
@@ -16,4 +21,7 @@ ci-sharded:
 	REPRO_FAKE_DEVICES=8 $(PY) -m pytest -q
 	REPRO_FAKE_DEVICES=8 $(PY) -m benchmarks.run --quick --only bench_latency
 
-ci: test bench-quick ci-sharded
+ci-guard:
+	REPRO_FAKE_DEVICES=8 $(PY) -m pytest -q tests/test_control_device.py
+
+ci: test bench-quick ci-sharded ci-guard

@@ -1,26 +1,33 @@
 """Fig. 6 analogue: end-to-end per-stage latency breakdown on this host.
 
 Stages mirror the paper's: YoloL (light detector) + Block (edge/motion +
-CC) = ROIDet, Alloc (utility table + DP), Fleet (batched encode+detect+score
-dispatch; Compress/Server separately in sequential mode), Harvest (the packed
+CC) = ROIDet, Alloc (host utility table + DP) or Ctrl (the device-resident
+control-loop dispatch), Fleet (batched encode+detect+score dispatch;
+Compress/Server separately in sequential mode), Harvest (the packed
 per-slot D2H fetch), Transmission (size/bandwidth, simulated).  Host-relative:
 absolute numbers are CPU-container times, the *breakdown* is the artifact.
 
-Also runs the three-way slot-step comparison on the same slot sequence:
+Also runs the four-way slot-step comparison on the same slot sequence:
 
   * sequential — per-camera Python loop (the equivalence reference);
   * batched    — the PR 1 fleet slot-step: one compiled program per slot but
-                 single-device, blocking harvest, no donation;
-  * sharded    — the camera-mesh shard_map + pipelined (deferred-harvest,
-                 donated-buffer) slot loop; identical to `batched` when only
-                 one device is visible.
+                 single-device, blocking harvest, no donation, host alloc;
+  * sharded    — camera-mesh shard_map + pipelined (deferred-harvest,
+                 donated-buffer) slot loop, allocator still host numpy
+                 (the PR 2 configuration);
+  * device     — sharded + the device-resident control loop
+                 (``alloc="device"``): elastic + utility table + knapsack
+                 picks traced on device, no per-slot (a, c) host sync.
 
 Reports wall-clock speedups, the max utility-log deviation of each batched
-mode vs sequential (must be ~1e-6 — all modes draw identical PRNG keys), and
-the number of fleet-executable compiles observed DURING the timed run
-(must be 0: the executable is compiled once per (method, config) at warmup).
-Run under ``REPRO_FAKE_DEVICES=8`` (or an XLA host-device flag) to see the
-sharded mode actually fan out.
+mode vs sequential (must be ~1e-6 — all modes draw identical PRNG keys), the
+number of fleet-executable compiles observed DURING the timed run (must be
+0), the per-mode allocator/elastic host ms per slot (the time the device
+mode eliminates), and the per-mode 'control' D2H fetch count (must be 0 for
+``alloc=device`` — the CPU-side transfer-guard analogue).  Each mode config
+records its allocator placement (``alloc=host|device``) next to the
+shard/donate/pipeline metadata.  Run under ``REPRO_FAKE_DEVICES=8`` (or an
+XLA host-device flag) to see the sharded modes actually fan out.
 """
 from __future__ import annotations
 
@@ -34,19 +41,30 @@ from benchmarks.common import profiled_system
 from repro.data.synthetic import MultiCameraScene, SceneConfig, bandwidth_trace
 
 MODES = {
-    "sequential": dict(batched=False),
-    "batched": dict(batched=True, shard="off", pipeline=False, donate=False),
-    "sharded": dict(batched=True, shard="auto", pipeline=True, donate=True),
+    "sequential": dict(batched=False, alloc="host"),
+    "batched": dict(batched=True, shard="off", pipeline=False, donate=False,
+                    alloc="host"),
+    "sharded": dict(batched=True, shard="auto", pipeline=True, donate=True,
+                    alloc="host"),
+    "device": dict(batched=True, shard="auto", pipeline=True, donate=True,
+                   alloc="device"),
 }
+
+# per-mode host-side control-loop timers: "alloc" is the numpy utility+DP
+# time, "ctrl" the device control-step dispatch, "gather" the shard-boundary
+# (a, c) gather — on CPU it absorbs the wait for the in-flight ROIDet, the
+# same wait the host modes pay inside their untimed (a, c) fetch
+_CTRL_TIMERS = ("alloc", "ctrl", "gather")
 
 
 def _compare_modes(base, num_cameras: int = 8, n_slots: int = 6,
                    warmup_slots: int = 2) -> dict:
-    """Sequential vs PR1-batched vs sharded+pipelined, same seeds/keys."""
+    """Sequential vs PR1-batched vs sharded vs device-alloc, same seeds."""
     from repro.core import fleet as fleet_mod
+    from repro.core import scheduler as sched_mod
     from repro.core.scheduler import DeepStreamSystem, SystemConfig
 
-    results, compiles = {}, {}
+    results, compiles, ctrl_ms, ctrl_fetches = {}, {}, {}, {}
     for name, kw in MODES.items():
         cfg = SystemConfig(scene=SceneConfig(seed=31, num_cameras=num_cameras),
                            eval_frames=base.cfg.eval_frames, **kw)
@@ -59,6 +77,8 @@ def _compare_modes(base, num_cameras: int = 8, n_slots: int = 6,
                  bandwidth_trace("medium", warmup_slots, seed=9),
                  method="deepstream")
         n0 = fleet_mod.compile_count()
+        f0 = sched_mod.d2h_fetch_counts().get("control", 0)
+        sysd.timers = {}
         scene = MultiCameraScene(SceneConfig(seed=13, num_cameras=num_cameras))
         trace = bandwidth_trace("medium", n_slots, seed=5)
         t0 = time.perf_counter()
@@ -66,26 +86,43 @@ def _compare_modes(base, num_cameras: int = 8, n_slots: int = 6,
         dt = time.perf_counter() - t0
         results[name] = (dt, logs)
         compiles[name] = fleet_mod.compile_count() - n0
+        ctrl_fetches[name] = sched_mod.d2h_fetch_counts().get("control", 0) - f0
+        ctrl_ms[name] = {
+            k: float(np.mean(sysd.timers[k]) * 1e3)
+            for k in _CTRL_TIMERS if k in sysd.timers}
 
     t_seq, logs_seq = results["sequential"]
     t_bat, logs_bat = results["batched"]
     t_shr, logs_shr = results["sharded"]
-    udiff_bat = float(np.max(np.abs(logs_seq["utility"] - logs_bat["utility"])))
-    udiff_shr = float(np.max(np.abs(logs_seq["utility"] - logs_shr["utility"])))
+    t_dev, logs_dev = results["device"]
+    udiff = {m: float(np.max(np.abs(logs_seq["utility"]
+                                    - results[m][1]["utility"])))
+             for m in ("batched", "sharded", "device")}
     return {
         "num_cameras": num_cameras,
         "slots": n_slots,
         "devices": jax.device_count(),
-        "mode_configs": MODES,       # the SystemConfig overrides each ran
+        "mode_configs": MODES,       # incl. alloc=host|device per mode
         "sequential_ms_per_slot": t_seq / n_slots * 1e3,
         "batched_ms_per_slot": t_bat / n_slots * 1e3,
         "sharded_ms_per_slot": t_shr / n_slots * 1e3,
+        "device_ms_per_slot": t_dev / n_slots * 1e3,
         "speedup_batched_vs_sequential": t_seq / t_bat,
         "speedup_sharded_vs_batched": t_bat / t_shr,
         "speedup_sharded_vs_sequential": t_seq / t_shr,
-        "max_utility_diff_batched": udiff_bat,
-        "max_utility_diff_sharded": udiff_shr,
+        "speedup_device_vs_sharded": t_shr / t_dev,
+        "speedup_device_vs_sequential": t_seq / t_dev,
+        "max_utility_diff_batched": udiff["batched"],
+        "max_utility_diff_sharded": udiff["sharded"],
+        "max_utility_diff_device": udiff["device"],
         "fleet_compiles_during_run": compiles,
+        # host ms/slot spent in the control loop per mode: "alloc" = numpy
+        # elastic+table+DP (host placement), "ctrl" = traced-program dispatch
+        # (device placement) — the delta is the eliminated allocator host time
+        "control_host_ms_per_slot": ctrl_ms,
+        # per-slot (a, c) D2H syncs during the timed run (0 proves the
+        # device-resident loop never touches the host for allocation)
+        "control_d2h_fetches_during_run": ctrl_fetches,
     }
 
 
@@ -99,6 +136,12 @@ def _print_cmp(cmp: dict) -> None:
     print(f"  sharded    {cmp['sharded_ms_per_slot']:9.1f} ms/slot   "
           f"({cmp['speedup_sharded_vs_batched']:.2f}x vs batched, "
           f"udiff {cmp['max_utility_diff_sharded']:.1e})")
+    print(f"  device     {cmp['device_ms_per_slot']:9.1f} ms/slot   "
+          f"({cmp['speedup_device_vs_sharded']:.2f}x vs sharded, "
+          f"udiff {cmp['max_utility_diff_device']:.1e})")
+    print(f"  control-loop host ms/slot: {cmp['control_host_ms_per_slot']}")
+    print(f"  control D2H fetches during timed runs: "
+          f"{cmp['control_d2h_fetches_during_run']}")
     print(f"  fleet compiles during timed runs: "
           f"{cmp['fleet_compiles_during_run']}")
 
@@ -117,18 +160,22 @@ def run(quick: bool = False) -> dict:
         stages[k] = float(np.mean(v) * 1e3)
     stages["transmission"] = float(np.mean(trans) * 1e3)
 
-    print("\n[Fig.6] per-stage latency (ms, host-relative; fleet/roidet are "
-          "dispatch times in pipelined mode):")
+    print("\n[Fig.6] per-stage latency (ms, host-relative; fleet/roidet/ctrl "
+          "are dispatch times in pipelined mode):")
     for k, v in sorted(stages.items(), key=lambda kv: -kv[1]):
         print(f"  {k:12s} {v:9.2f}")
 
     cmp8 = _compare_modes(sysd, num_cameras=8, n_slots=4 if quick else 8)
     _print_cmp(cmp8)
-    out = {"stages_ms": stages, "fleet_comparison": cmp8,
-           "headline": (f"sharded {cmp8['speedup_sharded_vs_batched']:.2f}x "
-                        f"vs batched, {cmp8['speedup_sharded_vs_sequential']:.2f}x "
+    out = {"stages_ms": stages,
+           "alloc_placement": sysd.cfg.alloc,   # stage run's allocator mode
+           "fleet_comparison": cmp8,
+           "headline": (f"device-alloc {cmp8['speedup_device_vs_sharded']:.2f}x "
+                        f"vs sharded, {cmp8['speedup_device_vs_sequential']:.2f}x "
                         f"vs sequential @C=8/{cmp8['devices']}dev "
-                        f"(udiff {cmp8['max_utility_diff_sharded']:.1e}, "
+                        f"(udiff {cmp8['max_utility_diff_device']:.1e}, "
+                        f"ctrl fetches "
+                        f"{cmp8['control_d2h_fetches_during_run']['device']}, "
                         f"compiles {sum(cmp8['fleet_compiles_during_run'].values())})")}
     if not quick:
         cmp16 = _compare_modes(sysd, num_cameras=16, n_slots=4)

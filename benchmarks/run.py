@@ -49,7 +49,8 @@ def _env_metadata() -> dict:
         "requested_fake_devices": int(fake) if fake else None,
         "system_defaults": {"shard": cfg.shard, "donate": cfg.donate,
                             "pipeline": cfg.pipeline,
-                            "batched": cfg.batched},
+                            "batched": cfg.batched,
+                            "alloc": cfg.alloc},
     }
 
 

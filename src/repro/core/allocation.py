@@ -9,6 +9,18 @@ with the knapsack DP in grid units d = gcd(bitrates) — O(|I||B||W|/d), the
 Pallas ``knapsack_dp`` kernel's sweep.  A greedy marginal-utility heuristic
 covers the continuous-bitrate variant (paper footnote 1), and an exhaustive
 oracle validates optimality in tests.
+
+Every allocator has two implementations:
+
+  * host (``allocate_dp`` / ``allocate_greedy`` / ``allocate_fair``) —
+    numpy in, ``Allocation`` out; the reference path;
+  * traced (``allocate_dp_jax`` / ``allocate_greedy_jax`` /
+    ``allocate_fair_jax``) — device arrays end to end, callable from inside
+    a jitted control program (the fleet's device-resident control loop).
+    The DP variant runs the kernel sweep at a STATIC bucketed capacity
+    (``dp_capacity``) and backtracks on device against the traced W, so a
+    whole bandwidth trace shares one compiled sweep and picks never visit
+    the host.
 """
 from __future__ import annotations
 
@@ -17,6 +29,8 @@ from dataclasses import dataclass
 from functools import reduce
 from typing import Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import utility as U
@@ -32,28 +46,42 @@ class Allocation:
     feasible: bool
 
 
+def _grid(bitrates: Sequence[int]) -> Tuple[np.ndarray, int]:
+    """(integer bitrates, d = gcd) — the DP's cost grid."""
+    bitr = np.asarray(bitrates, np.int64)
+    return bitr, reduce(math.gcd, [int(b) for b in bitr])
+
+
+def dp_capacity(bitrates: Sequence[int], W_max_kbps: float) -> int:
+    """Static DP capacity (grid units, bucketed with the kernel's own
+    ``bucket_capacity``, exactly like ``solve``) covering every
+    W <= W_max_kbps: the device-resident allocator sweeps at this ONE static
+    capacity for a whole bandwidth trace and bounds the traced per-slot W
+    inside the program."""
+    _, d = _grid(bitrates)
+    return dp_ops.bucket_capacity(int(float(W_max_kbps) // d))
+
+
 def build_utility_table(mlp_params, a: np.ndarray, c: np.ndarray,
                         bitrates: Sequence[int], resolutions: Sequence[float],
                         weights: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Returns (util (I, J) = lambda_i * max_r alpha_hat, best_res (I, J)).
 
-    One fused (I*J*R, 4) MLP evaluation instead of a Python loop over the
-    resolution axis (R separate dispatches)."""
-    util_r = np.asarray(U.predict_grid(
+    Fetches the traced ``utility.utility_table`` (one fused (I*J*R, 4) MLP
+    evaluation), so the host path and the device-resident control loop build
+    bitwise-identical tables."""
+    util, best_res = U.utility_table(
         mlp_params, np.asarray(a, np.float32), np.asarray(c, np.float32),
         np.asarray(bitrates, np.float32),
-        np.asarray(resolutions, np.float32)))             # (I, J, R)
-    best_r_idx = util_r.argmax(-1)
-    best = util_r.max(-1) * np.asarray(weights, np.float32)[:, None]
-    best_res = np.asarray(resolutions, np.float32)[best_r_idx]
-    return best.astype(np.float32), best_res
+        np.asarray(resolutions, np.float32),
+        np.asarray(weights, np.float32))
+    return np.asarray(util), np.asarray(best_res)
 
 
 def allocate_dp(util: np.ndarray, best_res: np.ndarray,
                 bitrates: Sequence[int], W_kbps: float,
                 use_kernel: bool = True) -> Allocation:
-    bitr = np.asarray(bitrates, np.int64)
-    d = reduce(math.gcd, [int(b) for b in bitr])
+    bitr, d = _grid(bitrates)
     costs = (bitr // d).astype(np.int32)
     Wg = int(W_kbps // d)
     I = util.shape[0]
@@ -68,9 +96,46 @@ def allocate_dp(util: np.ndarray, best_res: np.ndarray,
                       float(total), feasible=True)
 
 
+def allocate_dp_jax(util: jax.Array, best_res: jax.Array,
+                    bitrates: Sequence[int], W_kbps: jax.Array, *,
+                    w_cap: int, use_kernel: bool = True
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                               jax.Array]:
+    """Traced ``allocate_dp``: device arrays in, device arrays out.
+
+    ``W_kbps`` is a TRACED scalar; ``w_cap`` the static grid capacity from
+    ``dp_capacity`` (W_kbps's grid value is clipped to it).  Returns
+    (picks (I,) int32, b (I,), res (I,), total, feasible) — identical values
+    to the host path for any W whose grid capacity is <= w_cap, including
+    the infeasibility clamp to the minimum bitrate.  One caveat: the grid
+    index floors in float32 here vs float64 on the host, so a W within
+    float32 ulp of an exact grid multiple can land one unit apart —
+    measure-zero for continuous bandwidth traces."""
+    bitr, d = _grid(bitrates)
+    costs = (bitr // d).astype(np.int32)
+    I = util.shape[0]
+    Wg = jnp.minimum(jnp.floor(jnp.asarray(W_kbps, jnp.float32) / d)
+                     .astype(jnp.int32), w_cap)
+    picks_dp, total_dp = dp_ops.solve_device(util, jnp.asarray(costs), Wg,
+                                             w_cap=w_cap,
+                                             use_kernel=use_kernel)
+    jmin = int(np.argmin(costs))
+    infeasible = int(costs.min()) * I > Wg
+    picks = jnp.where(infeasible, jmin, picks_dp)
+    b = jnp.asarray(bitr, jnp.float32)[picks]
+    res = best_res[jnp.arange(I), picks]
+    total = jnp.where(infeasible, jnp.sum(util[:, jmin]), total_dp)
+    return picks, b, res, total, ~infeasible
+
+
 def allocate_greedy(util: np.ndarray, best_res: np.ndarray,
                     bitrates: Sequence[int], W_kbps: float) -> Allocation:
-    """Greedy marginal-utility-per-Kbps upgrades (continuous-variant heuristic)."""
+    """Greedy marginal-utility-per-Kbps upgrades (continuous-variant heuristic).
+
+    Zero-gain upgrades ARE taken (positive gains still win the argmax): on
+    utility plateaus — sigmoid saturation at high bitrates gives exactly
+    equal adjacent entries — refusing the free step would strand budget
+    below later positive-gain upgrades and diverge from the DP."""
     bitr = np.asarray(bitrates, np.float64)
     I, J = util.shape
     picks = np.zeros(I, np.int64)
@@ -79,13 +144,13 @@ def allocate_greedy(util: np.ndarray, best_res: np.ndarray,
         return Allocation(np.full(I, bitr[0]), best_res[:, 0],
                           float(util[:, 0].sum()), feasible=False)
     while True:
-        best_gain, best_i = 0.0, -1
+        best_gain, best_i = -1.0, -1
         for i in range(I):
             j = picks[i]
             if j + 1 < J:
                 dc = bitr[j + 1] - bitr[j]
                 gain = (util[i, j + 1] - util[i, j]) / max(dc, 1e-9)
-                if dc <= budget and gain > best_gain:
+                if dc <= budget and gain >= 0.0 and gain > best_gain:
                     best_gain, best_i = gain, i
         if best_i < 0:
             break
@@ -96,12 +161,69 @@ def allocate_greedy(util: np.ndarray, best_res: np.ndarray,
                       float(util[np.arange(I), picks].sum()), feasible=True)
 
 
-def allocate_fair(bitrates: Sequence[int], W_kbps: float, num_cams: int,
-                  best_res: Optional[np.ndarray] = None) -> np.ndarray:
+def allocate_greedy_jax(util: jax.Array, best_res: jax.Array,
+                        bitrates: Sequence[int], W_kbps: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array, jax.Array]:
+    """Traced ``allocate_greedy`` (the device fallback when the DP kernel is
+    off): a ``while_loop`` of vectorized upgrade rounds, same tie/plateau
+    handling (zero-gain upgrades taken, first-max camera wins ties).
+    Returns (picks, b, res, total, feasible)."""
+    bitr = jnp.asarray(bitrates, jnp.float32)
+    I, J = util.shape
+    iidx = jnp.arange(I)
+    budget0 = jnp.asarray(W_kbps, jnp.float32) - bitr[0] * I
+    feasible = budget0 >= 0
+
+    def body(carry):
+        picks, budget, _ = carry
+        can = picks + 1 < J
+        jn = jnp.where(can, picks + 1, picks)
+        dc = bitr[jn] - bitr[picks]
+        gain = (util[iidx, jn] - util[iidx, picks]) / jnp.maximum(dc, 1e-9)
+        ok = can & (dc <= budget) & (gain >= 0.0)
+        best_i = jnp.argmax(jnp.where(ok, gain, -jnp.inf))
+        has = jnp.any(ok)
+        picks = picks.at[best_i].add(jnp.where(has, 1, 0))
+        budget = budget - jnp.where(has, dc[best_i], 0.0)
+        return picks, budget, has
+
+    picks, _, _ = jax.lax.while_loop(
+        lambda carry: carry[2], body,
+        (jnp.zeros(I, jnp.int32), budget0, feasible))
+    b = bitr[picks]
+    res = best_res[iidx, picks]
+    total = jnp.sum(util[iidx, picks])
+    return picks, b, res, total, feasible
+
+
+def allocate_fair(bitrates: Sequence[int], W_kbps: float,
+                  num_cams: int) -> Allocation:
     """Equal-share baseline: largest bitrate <= W/I per camera (Reducto-style
-    fair split; also the 'static' baseline given a fixed W)."""
+    fair split; also the 'static' baseline given a fixed W).
+
+    Like its siblings it reports infeasibility instead of silently clamping:
+    when W/I is below every option the minimum bitrate is assigned with
+    ``feasible=False``.  Fair split is content-blind, so ``resolutions`` is
+    all-ones and ``predicted_utility`` 0.0 (there is no utility table to
+    predict from)."""
     share = W_kbps / num_cams
     bitr = np.asarray(bitrates, np.float64)
     feas = bitr[bitr <= share]
-    b = feas.max() if len(feas) else bitr.min()
-    return np.full(num_cams, b)
+    feasible = len(feas) > 0
+    b = feas.max() if feasible else bitr.min()
+    return Allocation(np.full(num_cams, b), np.ones(num_cams), 0.0,
+                      feasible=feasible)
+
+
+def allocate_fair_jax(bitrates: Sequence[int], W_kbps: jax.Array,
+                      num_cams: int) -> Tuple[jax.Array, jax.Array]:
+    """Traced ``allocate_fair``: returns ((I,) bitrates, feasible) on
+    device."""
+    bitr = jnp.asarray(bitrates, jnp.float32)
+    share = jnp.asarray(W_kbps, jnp.float32) / num_cams
+    ok = bitr <= share
+    feasible = jnp.any(ok)
+    b = jnp.where(feasible, jnp.max(jnp.where(ok, bitr, -jnp.inf)),
+                  jnp.min(bitr))
+    return jnp.full((num_cams,), 1.0, jnp.float32) * b, feasible

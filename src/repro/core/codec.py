@@ -65,6 +65,15 @@ def _resolution_blur(frames: jax.Array, res: float) -> jax.Array:
     return up[:, :H, :W]
 
 
+def _select_resolution(cfg: CodecConfig, frames: jax.Array, res: jax.Array
+                       ) -> jax.Array:
+    """Traced nearest-resolution blur select (static unroll over the small
+    resolution set) — the ONE branching both encode modes share."""
+    outs = jnp.stack([_resolution_blur(frames, r) for r in cfg.resolutions])
+    ridx = jnp.argmin(jnp.abs(jnp.array(cfg.resolutions) - res))
+    return outs[ridx]
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def encode_segment(cfg: CodecConfig, frames: jax.Array, roi_pixels: jax.Array,
                    bitrate_kbps: jax.Array, res: jax.Array, key: jax.Array,
@@ -81,12 +90,7 @@ def encode_segment(cfg: CodecConfig, frames: jax.Array, roi_pixels: jax.Array,
     bits = bitrate_kbps * 1000.0 * cfg.slot_seconds
     bpp = bits / jnp.maximum(pix, 1.0)
 
-    # resolution loss branches (static unroll over the small resolution set)
-    def blur_for(r):
-        return _resolution_blur(frames, r)
-    outs = jnp.stack([blur_for(r) for r in cfg.resolutions])
-    ridx = jnp.argmin(jnp.abs(jnp.array(cfg.resolutions) - res))
-    x = outs[ridx]
+    x = _select_resolution(cfg, frames, res)
 
     # quantization: step shrinks as bpp grows
     levels = jnp.clip(cfg.quant_scale * bpp, 4.0, 256.0)
@@ -100,14 +104,27 @@ def encode_segment(cfg: CodecConfig, frames: jax.Array, roi_pixels: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def encode_segment_crf(cfg: CodecConfig, frames: jax.Array,
-                       roi_pixels: jax.Array, key: jax.Array
+                       roi_pixels: jax.Array, key: jax.Array,
+                       res: Optional[jax.Array] = None,
+                       num_frames: Optional[jax.Array] = None
                        ) -> Tuple[jax.Array, jax.Array]:
-    """CRF ('constant quality') mode: fixed bpp, content-proportional size."""
+    """CRF ('constant quality') mode: fixed bpp, content-proportional size.
+
+    ``num_frames`` and ``res`` have the SAME semantics as in
+    ``encode_segment``: a traced kept-frame count overriding the shape-
+    derived N (fleet reducto's fixed-shape segments), and the resolution
+    scale whose r^2 term ``effective_pixels`` charges — so CRF sizes are
+    P * crf_bpp / 8 for exactly P = effective_pixels(cfg, roi_pixels, n, r).
+    ``res`` also routes through the same resolution-blur branches."""
     N = frames.shape[0]
-    pix = roi_pixels * (1.0 + cfg.temporal_rho * (N - 1))
+    n_eff = (jnp.float32(N) if num_frames is None
+             else num_frames.astype(jnp.float32))
+    r = jnp.float32(1.0) if res is None else jnp.asarray(res, jnp.float32)
+    pix = roi_pixels * r * r * (1.0 + cfg.temporal_rho * (n_eff - 1.0))
     bpp = jnp.asarray(cfg.crf_bpp, jnp.float32)
+    x = frames if res is None else _select_resolution(cfg, frames, r)
     levels = jnp.clip(cfg.quant_scale * bpp, 4.0, 256.0)
-    x = jnp.round(frames * levels) / levels
+    x = jnp.round(x * levels) / levels
     sigma = cfg.sigma0 * jnp.exp(-bpp / cfg.beta)
     x = x + sigma * jax.random.normal(key, x.shape)
     return jnp.clip(x, 0.0, 1.0), pix * bpp / 8.0

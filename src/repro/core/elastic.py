@@ -12,12 +12,23 @@ Adjustment (section 5.3.2): when a(t) > tau_a and W(t) < tau_wl, borrow
 D = gamma_wl * (tau_wl - W(t)) * T of extra transmission (delaying the next
 slot), bounded by a budget; when W(t) >= tau_wh, repay by finishing early.
 The Bandwidth Allocation constraint becomes sum_i b_i T <= W T + D.
+
+Two implementations share this module:
+
+  * ``update`` — the pure-numpy host reference (float64), kept as the
+    equivalence baseline;
+  * ``update_jax`` / ``update_scan`` — the traced controller on an
+    ``ElasticStateJax`` of DEVICE scalars (EMA / variance / debt), used by
+    the fleet's device-resident control loop so no per-slot host sync is
+    needed to adjust the next slot's budget.  Same update rule, float32.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -93,3 +104,85 @@ def update(cfg: ElasticConfig, state: ElasticState, total_area: float,
     extra = borrowed - repaid
     return new_state, extra, {"tau_a": tau_a, "borrowed": borrowed,
                               "repaid": repaid, "debt": debt}
+
+
+# -- traced controller (device-resident control loop) -------------------------
+
+class ElasticStateJax(NamedTuple):
+    """``ElasticState`` as device scalars, threadable through jit/scan."""
+    a_ema: jax.Array
+    a_var: jax.Array
+    debt_kbits: jax.Array
+    initialized: jax.Array       # bool scalar; selects the first-slot branch
+
+
+def init_state_jax() -> ElasticStateJax:
+    z = jnp.float32(0.0)
+    return ElasticStateJax(a_ema=z, a_var=z, debt_kbits=z,
+                           initialized=jnp.asarray(False))
+
+
+def update_jax(cfg: ElasticConfig, state: ElasticStateJax,
+               total_area: jax.Array, W_kbps: jax.Array, tau_wl: jax.Array,
+               tau_wh: jax.Array) -> Tuple[ElasticStateJax, jax.Array,
+                                           Dict[str, jax.Array]]:
+    """Traced ``update``: one slot of the controller on device scalars.
+
+    Same update rule as the numpy reference (first-slot initialization,
+    borrow clamped by ``budget_kbits``, repay only when not borrowing);
+    float32, so equivalence to the float64 host path is to rounding, not
+    bit-exact.  Both branches are computed and selected (no host control
+    flow) — this is what lets the whole control loop live inside one jitted
+    program."""
+    total_area = jnp.asarray(total_area, jnp.float32)
+    W_kbps = jnp.asarray(W_kbps, jnp.float32)
+
+    sigma_a = jnp.sqrt(jnp.maximum(state.a_var, 1e-12))
+    tau_a = state.a_ema + cfg.gamma_a * sigma_a
+
+    borrow = (total_area > tau_a) & (W_kbps < tau_wl)
+    headroom = jnp.maximum(cfg.budget_kbits - state.debt_kbits, 0.0)
+    borrowed = jnp.where(
+        borrow,
+        jnp.minimum(cfg.gamma_wl * (tau_wl - W_kbps) * cfg.slot_seconds,
+                    headroom),
+        0.0)
+    repay = (~borrow) & (W_kbps >= tau_wh) & (state.debt_kbits > 0.0)
+    repaid = jnp.where(
+        repay,
+        jnp.minimum(state.debt_kbits, (W_kbps - tau_wh) * cfg.slot_seconds),
+        0.0)
+    debt = state.debt_kbits + borrowed - repaid
+
+    delta = total_area - state.a_ema
+    a_ema = state.a_ema + cfg.alpha * delta
+    a_var = (1 - cfg.alpha) * (state.a_var + cfg.alpha * delta * delta)
+
+    init = state.initialized
+    new_state = ElasticStateJax(
+        a_ema=jnp.where(init, a_ema, total_area),
+        a_var=jnp.where(init, a_var, 0.0),
+        debt_kbits=jnp.where(init, debt, 0.0),
+        initialized=jnp.asarray(True))
+    zero = jnp.float32(0.0)
+    borrowed = jnp.where(init, borrowed, zero)
+    repaid = jnp.where(init, repaid, zero)
+    extra = borrowed - repaid
+    log = {"tau_a": jnp.where(init, tau_a, jnp.float32(jnp.inf)),
+           "borrowed": borrowed, "repaid": repaid,
+           "debt": new_state.debt_kbits}
+    return new_state, extra, log
+
+
+def update_scan(cfg: ElasticConfig, state: ElasticStateJax, areas: jax.Array,
+                Ws: jax.Array, tau_wl: jax.Array, tau_wh: jax.Array
+                ) -> Tuple[ElasticStateJax, jax.Array]:
+    """``lax.scan`` the traced controller over a whole (T,) trace in ONE
+    dispatch (the scan-over-slots variant for short traces).
+    Returns (final state, per-slot extra-capacity (T,) in Kbit)."""
+    def step(st, xs):
+        area, W = xs
+        st, extra, _ = update_jax(cfg, st, area, W, tau_wl, tau_wh)
+        return st, extra
+    return jax.lax.scan(step, state, (jnp.asarray(areas, jnp.float32),
+                                      jnp.asarray(Ws, jnp.float32)))

@@ -29,6 +29,36 @@ Method routing is pure data, no Python branches in the hot loop:
     the last kept frame (part of the same detector batch) score the
     filtered-out frames' GT, mixed as w_keep*F1_kept + (1-w_keep)*F1_reuse.
 
+Device-resident control loop
+----------------------------
+The server-side control loop (paper sections 5.2 + 5.3 — elastic adjustment,
+utility table, knapsack allocation) runs as ONE traced program per method
+(``fleet_control_step``): slot t's per-camera (b, r) assignment is computed
+on device from the fleet ROIDet's (a, c) feature vectors, a prefetched
+bandwidth-trace device array, and an ``ElasticStateJax`` of device scalars
+threaded slot to slot.  What runs on device: the elastic EMA/variance/debt
+update, the fused utility-MLP table, the knapsack sweep at ONE static
+bucketed capacity (``allocation.dp_capacity``) with a traced backtrack, the
+traced fair/static pick, and the (extra, area, alloc_kbps, feasible) log
+pack.  What the host still does: segment generation + upload, reducto's
+keep-flag decision (its frame-index arrays are host-built shapes), and
+harvesting the packed per-slot logs — slot t's (F1, sizes) ``host_pack``
+plus the (4,) control pack, both fetched while slot t+1 is in flight.
+Transfer-guard guarantee: with ``SystemConfig.alloc="device"`` the timed
+slot loop runs clean under ``jax.transfer_guard_device_to_host("disallow")``
+apart from those explicitly-scoped harvest fetches — the per-slot (a, c)
+host sync of the numpy control path is gone.  (On the CPU backend D2H is
+zero-copy and the guard never fires; there the checkable proof is
+``scheduler.d2h_fetch_counts()``, through which every loop fetch is routed:
+device-alloc runs perform ZERO 'control' fetches.)
+The allocator runs on ONE device outside the camera mesh — the knapsack DP
+is a sequential cross-camera recurrence with nothing to shard — so
+camera-sharded (a, c) cross the shard boundary through
+``sharding.rules.unshard`` (one device-to-device gather) and GSPMD reshards
+the resulting (b, r) into the sharded slot-step.  ``fleet_control_scan`` is
+the lax.scan-over-slots variant: a whole short trace's control trajectory
+in one dispatch.
+
 Mesh & donation
 ---------------
 The camera axis is the leading axis of every per-camera operand, and the
@@ -55,12 +85,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import allocation as alloc_mod
 from repro.core import codec as codec_mod
+from repro.core import elastic as elastic_mod
 from repro.core import roidet as roidet_mod
+from repro.core import utility as util_mod
 from repro.core.codec import CodecConfig
+from repro.core.elastic import ElasticConfig, ElasticStateJax
 from repro.models import detector as det
 from repro.sharding.rules import (mesh_cache_key, pad_cameras, pad_leading,
-                                  sharded_jit)
+                                  reshard_replicated, sharded_jit, unshard)
 
 
 class FleetSlotOut(NamedTuple):
@@ -185,6 +219,154 @@ def compile_count() -> int:
     (mesh, config) executable — the bench's recompile detector: a 10-slot
     ``run()`` must raise this by at most one per (method, config)."""
     return sum(_COMPILE_COUNTS.values())
+
+
+# -- device-resident control loop (elastic + allocation) ----------------------
+
+class ControlOut(NamedTuple):
+    b: jax.Array           # (C,) assigned bitrates (Kbps), device
+    r: jax.Array           # (C,) assigned resolutions, device
+    est: ElasticStateJax   # threaded slot to slot, device scalars
+    pack: jax.Array        # (4,) [extra_kbps, area, alloc_kbps, feasible]
+
+
+def _control_impl(mlp_params, jcab_util, jcab_res, lam, a, c, W_t, est,
+                  tau_wl, tau_wh, *, method: str, ecfg: ElasticConfig,
+                  bitrates: Tuple[int, ...], resolutions: Tuple[float, ...],
+                  slot_seconds: float, use_elastic: bool, use_kernel: bool,
+                  w_cap: int, num_cams: int) -> ControlOut:
+    """One traced slot of the server-side control loop (sections 5.2 + 5.3):
+    elastic adjustment -> utility table -> allocation, method-routed at
+    trace time.  Every input/output is a device array; the only host values
+    are the statics."""
+    zero = jnp.float32(0.0)
+    W_t = jnp.asarray(W_t, jnp.float32)
+    if method in ("deepstream", "deepstream_no_elastic"):
+        area = jnp.sum(jnp.asarray(a, jnp.float32))
+        extra = zero
+        if use_elastic:
+            est, extra_kbits, _ = elastic_mod.update_jax(
+                ecfg, est, area, W_t, tau_wl, tau_wh)
+            extra = extra_kbits / slot_seconds   # Kbps-equivalent
+        util, best_res = util_mod.utility_table(
+            mlp_params, a, c, jnp.asarray(bitrates, jnp.float32),
+            jnp.asarray(resolutions, jnp.float32), lam)
+        W_eff = jnp.maximum(W_t + extra, float(bitrates[0]))
+        _, b, r, _, feasible = alloc_mod.allocate_dp_jax(
+            util, best_res, bitrates, W_eff, w_cap=w_cap,
+            use_kernel=use_kernel)
+    elif method == "jcab":
+        area = extra = zero
+        _, b, r, _, feasible = alloc_mod.allocate_dp_jax(
+            jcab_util, jcab_res, bitrates, W_t, w_cap=w_cap,
+            use_kernel=use_kernel)
+    elif method in ("reducto", "static"):
+        area = extra = zero
+        b, feasible = alloc_mod.allocate_fair_jax(bitrates, W_t, num_cams)
+        r = jnp.ones(num_cams, jnp.float32)
+    else:
+        raise ValueError(method)
+    pack = jnp.stack([extra, area, jnp.sum(b),
+                      jnp.asarray(feasible, jnp.float32)])
+    return ControlOut(b=b, r=r, est=est, pack=pack)
+
+
+_CTRL_COMPILE_COUNTS: Dict[Tuple, int] = {}
+
+
+def control_compile_count() -> int:
+    """Traced specializations of the control-step/scan executables (separate
+    from ``compile_count``: each method owns one small control program, so a
+    first run of a new method legitimately adds one)."""
+    return sum(_CTRL_COMPILE_COUNTS.values())
+
+
+def _get_control_executable(kind: str, **statics):
+    key = (kind,) + tuple(sorted(statics.items()))
+    fn = _EXEC_CACHE.get(key)
+    if fn is not None:
+        return fn
+    impl = functools.partial(_control_impl, **statics)
+    if kind == "ctrl_scan":
+        def scanned(mlp_params, jcab_util, jcab_res, lam, a_tr, c_tr, W_tr,
+                    est, tau_wl, tau_wh):
+            _CTRL_COMPILE_COUNTS[key] = _CTRL_COMPILE_COUNTS.get(key, 0) + 1
+            def step(carry, xs):
+                a, c, W = xs
+                out = impl(mlp_params, jcab_util, jcab_res, lam, a, c, W,
+                           carry, tau_wl, tau_wh)
+                return out.est, (out.b, out.r, out.pack)
+            est_f, (b, r, packs) = jax.lax.scan(step, est, (a_tr, c_tr, W_tr))
+            return b, r, packs, est_f
+        fn = jax.jit(scanned)
+    else:
+        def counted(*args):
+            _CTRL_COMPILE_COUNTS[key] = _CTRL_COMPILE_COUNTS.get(key, 0) + 1
+            return impl(*args)
+        fn = jax.jit(counted)
+    _EXEC_CACHE[key] = fn
+    return fn
+
+
+def fleet_control_step(method: str, mlp_params, jcab_util, jcab_res, lam,
+                       a, c, W_t, est: ElasticStateJax, tau_wl, tau_wh, *,
+                       ecfg: ElasticConfig, bitrates: Sequence[int],
+                       resolutions: Sequence[float], slot_seconds: float,
+                       use_elastic: bool, use_kernel: bool, w_cap: int,
+                       num_cams: int, mesh: Optional[Mesh] = None
+                       ) -> ControlOut:
+    """Dispatch one slot of the device-resident control loop WITHOUT
+    blocking: slot t's (b, r) come back as device arrays ready to feed
+    ``fleet_slot_step``; callers fetch ``pack`` with the deferred log
+    harvest.  ``a``/``c`` may be None for content-agnostic methods.
+    Camera-sharded features are gathered onto one device at the shard
+    boundary (the allocator runs outside the camera mesh)."""
+    if a is not None:
+        a = unshard(a, mesh)
+        c = unshard(c, mesh)
+    fn = _get_control_executable(
+        "ctrl", method=method, ecfg=ecfg, bitrates=tuple(bitrates),
+        resolutions=tuple(resolutions), slot_seconds=float(slot_seconds),
+        use_elastic=bool(use_elastic), use_kernel=bool(use_kernel),
+        w_cap=int(w_cap), num_cams=int(num_cams))
+    out = fn(mlp_params, jcab_util, jcab_res, lam, a, c, W_t, est,
+             tau_wl, tau_wh)
+    if mesh is not None:
+        # (b, r) feed the mesh-committed slot-step; est/pack stay put (est
+        # cycles back into the next control step, pack is harvest-only)
+        out = out._replace(b=reshard_replicated(out.b, mesh),
+                           r=reshard_replicated(out.r, mesh))
+    return out
+
+
+def fleet_control_scan(method: str, mlp_params, jcab_util, jcab_res, lam,
+                       a_trace, c_trace, W_trace, est: ElasticStateJax,
+                       tau_wl, tau_wh, *, ecfg: ElasticConfig,
+                       bitrates: Sequence[int],
+                       resolutions: Sequence[float], slot_seconds: float,
+                       use_elastic: bool, use_kernel: bool, w_cap: int,
+                       num_cams: int
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  ElasticStateJax]:
+    """``lax.scan``-over-slots variant for short traces: the WHOLE control
+    trajectory — (T, C) features + (T,) bandwidth trace -> (T, C) (b, r)
+    assignments, (T, 4) log packs and the final elastic state — in ONE
+    dispatch.  Slot-equivalent to T ``fleet_control_step`` calls; like the
+    step, ``a_trace``/``c_trace`` may be None for content-agnostic methods
+    (zeros are scanned in their place — those branches never read them)."""
+    W_trace = jnp.asarray(W_trace, jnp.float32)
+    if a_trace is None:
+        a_trace = c_trace = jnp.zeros((W_trace.shape[0], int(num_cams)),
+                                      jnp.float32)
+    fn = _get_control_executable(
+        "ctrl_scan", method=method, ecfg=ecfg, bitrates=tuple(bitrates),
+        resolutions=tuple(resolutions), slot_seconds=float(slot_seconds),
+        use_elastic=bool(use_elastic), use_kernel=bool(use_kernel),
+        w_cap=int(w_cap), num_cams=int(num_cams))
+    return fn(mlp_params, jcab_util, jcab_res, lam,
+              jnp.asarray(a_trace, jnp.float32),
+              jnp.asarray(c_trace, jnp.float32), W_trace, est,
+              tau_wl, tau_wh)
 
 
 def fleet_slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,

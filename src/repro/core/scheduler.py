@@ -13,11 +13,16 @@ Two execution modes (``SystemConfig.batched``):
     (``core.fleet.fleet_slot_step``) shared by ALL methods (deepstream,
     jcab, reducto, static — method routing is data, not Python branches), so
     ``run()`` compiles the fleet executable once per (method, config).  The
-    slot loop is pipelined: per slot the host fetches only the packed
-    (a_i, c_i) scalars the allocator/elastic controller needs (one D2H
-    transfer) plus the previous slot's packed (F1, sizes) — slot t+1's
-    ROIDet dispatches while slot t's scores are still in flight
-    (``SystemConfig.pipeline``).  With >1 device the camera axis is
+    slot loop is pipelined: slot t+1's ROIDet dispatches while slot t's
+    scores are still in flight (``SystemConfig.pipeline``).  With the
+    default ``SystemConfig.alloc="device"`` the control loop itself
+    (elastic + utility table + allocation, ``fleet.fleet_control_step``)
+    is a traced program consuming the ROIDet (a, c) device vectors and a
+    prefetched bandwidth-trace device array — the host harvests ONLY the
+    previous slot's packed (F1, sizes) + (4,) control logs, so the timed
+    loop is clean under ``jax.transfer_guard_device_to_host("disallow")``.
+    ``alloc="host"`` keeps the numpy reference control path (one packed
+    (a, c) D2H fetch per slot).  With >1 device the camera axis is
     shard_map'd over a ("camera",) mesh and the big per-slot buffers are
     donated (``SystemConfig.shard`` / ``donate``).
   * sequential — the original per-camera Python loop, kept as the
@@ -66,6 +71,33 @@ from repro.sharding import rules as shard_rules
 MOTION_KEEP_THRESH = 25.0
 
 
+# -- device-to-host accounting ------------------------------------------------
+# Every D2H fetch the batched loop performs goes through ``_d2h`` so the
+# "zero per-slot sync" guarantee of the device-resident control loop is
+# CHECKABLE: on TPU/GPU, running the loop under
+# ``jax.transfer_guard_device_to_host("disallow")`` trips on any fetch not
+# scoped ``exempt`` (the log harvest + reducto's camera-side keep decision);
+# on the CPU backend D2H is zero-copy and the guard never fires, so the
+# per-category counters below are the proof instead (tests assert
+# ``control == 0`` in device-alloc mode).
+
+_D2H_FETCHES: Dict[str, int] = {}
+
+
+def d2h_fetch_counts() -> Dict[str, int]:
+    """Snapshot of the per-category D2H fetch counters ('harvest', 'keep',
+    'control') since process start."""
+    return dict(_D2H_FETCHES)
+
+
+def _d2h(x, kind: str, exempt: bool = False) -> np.ndarray:
+    _D2H_FETCHES[kind] = _D2H_FETCHES.get(kind, 0) + 1
+    if exempt:
+        with jax.transfer_guard_device_to_host("allow"):
+            return np.asarray(x)
+    return np.asarray(x)
+
+
 def _motion_keep(score_sums: np.ndarray) -> np.ndarray:
     """(..., N-1) per-pair motion-score sums -> (..., N) keep flags; the
     first frame of a segment is always kept."""
@@ -97,6 +129,15 @@ class SystemConfig:
     shard: str = "auto"                       # "auto": camera mesh if >1 dev
     pipeline: bool = True                     # deferred-harvest slot loop
     donate: bool = True                       # donate per-slot fleet buffers
+    alloc: str = "device"                     # control loop: "device" | "host"
+
+    def __post_init__(self):
+        if self.alloc not in ("device", "host"):
+            raise ValueError(f"alloc must be 'device' or 'host': {self.alloc!r}")
+        # the sequential reference loop has no traced control path; normalize
+        # so the config (and bench metadata stamped from it) states what runs
+        if not self.batched:
+            self.alloc = "host"
 
     def lam(self) -> np.ndarray:
         if self.weights is None:
@@ -389,7 +430,12 @@ class DeepStreamSystem:
         sc = em_ops.segment_motion_fleet(
             jnp.asarray(frames), block_size=self.cfg.block_size,
             use_kernel=self.cfg.use_kernels, mesh=self.mesh)  # (C,N-1,M,Nb)
-        keep = _motion_keep(np.asarray(jnp.sum(sc, axis=(2, 3))))  # 1 fetch
+        # the camera-side keep decision is host control flow (it shapes the
+        # host-built eval/miss index arrays), so this ONE packed (C, N-1)
+        # fetch stays — a documented transfer-guard exemption, like the log
+        # harvest; the ALLOCATION side of reducto is still device-resident
+        keep = _motion_keep(_d2h(jnp.sum(sc, axis=(2, 3)), "keep",
+                                 exempt=True))
         n_eff = keep.sum(axis=1).astype(np.float32)
         eval_idx = np.zeros((C, F), np.int64)
         m_per_cam = np.zeros(C, np.int64)
@@ -419,6 +465,20 @@ class DeepStreamSystem:
 
     # -- online loop -------------------------------------------------------------
 
+    def _jcab_utility_table(self) -> Tuple[np.ndarray, np.ndarray]:
+        """jcab's content-agnostic (util (C, J), best_res (C, J)) tables —
+        the same (J, R) profiled table folded and lambda-weighted for every
+        camera.  The ONE construction both control paths use: the host
+        allocator calls it per slot, the device context uploads it once."""
+        jt = self.jcab_table                              # (J, R)
+        C = self.cfg.scene.num_cameras
+        lam = self.cfg.lam()
+        util = (np.repeat(jt.max(-1)[None], C, 0)
+                * lam[:, None]).astype(np.float32)
+        best_res = np.repeat(np.asarray(
+            self.cfg.codec.resolutions, np.float32)[jt.argmax(-1)][None], C, 0)
+        return util, best_res
+
     def run(self, scene: MultiCameraScene, trace_kbps: np.ndarray,
             method: str = "deepstream", use_elastic: Optional[bool] = None
             ) -> Dict[str, np.ndarray]:
@@ -445,8 +505,10 @@ class DeepStreamSystem:
 
         if method in ("deepstream", "deepstream_no_elastic"):
             roi = self.camera_features(frames, block=not self.cfg.batched)
-            # the ONE camera-side sync: packed (a_i, c_i) scalars
-            ac = np.asarray(jnp.stack([roi.area_ratio, roi.confidence]))
+            # the host control path's ONE camera-side sync: packed (a_i, c_i)
+            # scalars — the fetch alloc="device" eliminates (counted, NOT
+            # transfer-guard exempt)
+            ac = _d2h(jnp.stack([roi.area_ratio, roi.confidence]), "control")
             a, c = ac[0], ac[1]
             area = float(a.sum())
             if use_elastic:
@@ -466,46 +528,119 @@ class DeepStreamSystem:
             alloc_kbps = float(al.bitrates_kbps.sum())
 
         elif method == "jcab":
-            # content-agnostic table: same for every camera, weighted
-            jt = self.jcab_table                          # (J, R)
-            util = np.repeat(jt.max(-1)[None], C, 0) * lam[:, None]
-            best_res = np.repeat(np.asarray(
-                cfgc.resolutions, np.float32)[jt.argmax(-1)][None], C, 0)
-            al = alloc.allocate_dp(util.astype(np.float32), best_res,
-                                   bitrates, W_t,
+            util, best_res = self._jcab_utility_table()
+            al = alloc.allocate_dp(util, best_res, bitrates, W_t,
                                    use_kernel=self.cfg.use_kernels)
             b, r = al.bitrates_kbps, al.resolutions
             alloc_kbps = float(al.bitrates_kbps.sum())
 
         elif method in ("reducto", "static"):
-            b = alloc.allocate_fair(bitrates, W_t, C)
-            r = np.ones(C)
-            alloc_kbps = float(np.sum(b))
+            al = alloc.allocate_fair(bitrates, W_t, C)
+            b, r = al.bitrates_kbps, al.resolutions
+            alloc_kbps = float(al.bitrates_kbps.sum())
         else:
             raise ValueError(method)
         return b, r, masks, extra, area, alloc_kbps, est
 
+    def _control_context(self, method: str, trace_kbps: np.ndarray,
+                         use_elastic: bool) -> Dict[str, Any]:
+        """Per-run device uploads for the traced control loop: the prefetched
+        bandwidth trace, lambda weights, elastic thresholds, (for jcab) the
+        content-agnostic table, the fresh device elastic state, and the ONE
+        static DP capacity covering every slot (trace max plus the maximum
+        elastic borrow)."""
+        cfgc = self.cfg.codec
+        bitrates = tuple(int(b) for b in cfgc.bitrates_kbps)
+        W_max = float(np.max(trace_kbps))
+        if use_elastic:
+            W_max += self.cfg.elastic.budget_kbits / cfgc.slot_seconds
+        W_max = max(W_max, float(bitrates[0]))
+        ctx: Dict[str, Any] = dict(
+            trace=jnp.asarray(np.asarray(trace_kbps, np.float32)),
+            lam=jnp.asarray(self.cfg.lam(), jnp.float32),
+            tau_wl=jnp.float32(self.tau_wl), tau_wh=jnp.float32(self.tau_wh),
+            w_cap=alloc.dp_capacity(bitrates, W_max),
+            est=elastic_mod.init_state_jax(),
+            jcab_util=None, jcab_res=None)
+        if method == "jcab":
+            # the SAME table _slot_allocation builds, uploaded ONCE per run
+            util, best_res = self._jcab_utility_table()
+            ctx["jcab_util"] = jnp.asarray(util)
+            ctx["jcab_res"] = jnp.asarray(best_res)
+        return ctx
+
+    def _slot_control_device(self, method: str, frames: jax.Array, t: int,
+                             ctx: Dict[str, Any], use_elastic: bool
+                             ) -> Tuple[jax.Array, jax.Array,
+                                        Optional[jax.Array], jax.Array]:
+        """Per-slot method routing, device-resident: ROIDet's (a, c) device
+        vectors feed the traced elastic -> allocation program directly —
+        no host fetch anywhere.  Returns (b, r, masks, ctrl_pack), all
+        device arrays; the elastic state is threaded through ``ctx``."""
+        a = c = masks = None
+        if method in ("deepstream", "deepstream_no_elastic"):
+            roi = self.camera_features(frames, block=False)
+            masks = roi.mask
+            # shard-boundary gather onto the control device; on CPU the
+            # device_put also absorbs the wait for the in-flight ROIDet, so
+            # time it apart from the control dispatch proper
+            t0 = time.perf_counter()
+            a = shard_rules.unshard(roi.area_ratio, self.mesh)
+            c = shard_rules.unshard(roi.confidence, self.mesh)
+            self._t("gather", t0)
+        t0 = time.perf_counter()
+        co = fleet_mod.fleet_control_step(
+            method, self.mlp if a is not None else None,
+            ctx["jcab_util"], ctx["jcab_res"], ctx["lam"], a, c,
+            ctx["trace"][t], ctx["est"], ctx["tau_wl"], ctx["tau_wh"],
+            ecfg=self.cfg.elastic,
+            bitrates=tuple(self.cfg.codec.bitrates_kbps),
+            resolutions=tuple(self.cfg.codec.resolutions),
+            slot_seconds=self.cfg.codec.slot_seconds,
+            use_elastic=use_elastic, use_kernel=self.cfg.use_kernels,
+            w_cap=ctx["w_cap"], num_cams=self.cfg.scene.num_cameras,
+            mesh=self.mesh)
+        ctx["est"] = co.est
+        self._t("ctrl", t0)
+        return co.b, co.r, masks, co.pack
+
     def _run_batched(self, scene: MultiCameraScene, trace_kbps: np.ndarray,
                      method: str, use_elastic: bool) -> Dict[str, np.ndarray]:
         """Pipelined fleet loop: every method routes through ONE compiled
-        slot-step; per slot the host syncs only on the packed content
-        features it needs for allocation, and slot t's (F1, sizes) pack is
-        harvested while slot t+1 is already in flight."""
+        slot-step.  With ``alloc="device"`` the control loop runs on device
+        too — the host only harvests slot t's packed (F1, sizes) + control
+        logs while slot t+1 is in flight (those fetches are scoped
+        transfer-guard exemptions; everything else is D2H-free).  With
+        ``alloc="host"`` the numpy reference control path syncs on one
+        packed (a, c) fetch per slot."""
         lam = self.cfg.lam()
         C = self.cfg.scene.num_cameras
+        device_ctrl = self.cfg.alloc == "device"
         est = ElasticState()
+        ctx = (self._control_context(method, trace_kbps, use_elastic)
+               if device_ctrl else None)
         logs = {k: [] for k in ("utility", "mean_f1", "bytes", "W", "extra",
                                 "alloc_kbps", "area")}
 
-        def harvest(out: fleet_mod.FleetSlotOut) -> None:
+        def harvest(item: Tuple[fleet_mod.FleetSlotOut,
+                                Optional[jax.Array]]) -> None:
+            out, cpack = item
             t0 = time.perf_counter()
-            pack = np.asarray(out.host_pack)      # ONE (2, C) D2H transfer
+            # the per-slot log harvest: one (2, C) + one (4,) D2H transfer,
+            # explicitly exempted from the loop's transfer-guard guarantee
+            pack = _d2h(out.host_pack, "harvest", exempt=True)
+            cp = (None if cpack is None
+                  else _d2h(cpack, "harvest", exempt=True))
             self._t("harvest", t0)
             logs["utility"].append(float(np.dot(lam, pack[0])))
             logs["mean_f1"].append(float(np.mean(pack[0])))
             logs["bytes"].append(float(np.sum(pack[1])))
+            if cp is not None:
+                logs["extra"].append(float(cp[0]))
+                logs["area"].append(float(cp[1]))
+                logs["alloc_kbps"].append(float(cp[2]))
 
-        pending: Optional[fleet_mod.FleetSlotOut] = None
+        pending: Optional[Tuple] = None
         for t in range(len(trace_kbps)):
             W_t = float(trace_kbps[t])
             seg = scene.segment()
@@ -516,8 +651,17 @@ class DeepStreamSystem:
             # slot uploads a fresh segment
             frames = jnp.asarray(seg["frames"])
             keys = self._keys(C)
-            b, r, masks, extra, area, alloc_kbps, est = self._slot_allocation(
-                method, frames, W_t, est, use_elastic)
+            if device_ctrl:
+                b, r, masks, cpack = self._slot_control_device(
+                    method, frames, t, ctx, use_elastic)
+            else:
+                b, r, masks, extra, area, alloc_kbps, est = \
+                    self._slot_allocation(method, frames, W_t, est,
+                                          use_elastic)
+                cpack = None
+                logs["extra"].append(extra)
+                logs["area"].append(area)
+                logs["alloc_kbps"].append(alloc_kbps)
             n_eff = eval_idx = eval_w = reuse = None
             if method == "reducto":
                 n_eff, eval_idx, eval_w, reuse = \
@@ -526,16 +670,13 @@ class DeepStreamSystem:
             out = self._slot_dispatch(frames, gts, masks, b, r, keys=keys,
                                       n_eff=n_eff, eval_idx=eval_idx,
                                       eval_w=eval_w, reuse=reuse)
-            logs["extra"].append(extra)
-            logs["area"].append(area)
-            logs["alloc_kbps"].append(alloc_kbps)
             logs["W"].append(W_t)
             if pending is not None:
                 harvest(pending)
             if self.cfg.pipeline:
-                pending = out
+                pending = (out, cpack)
             else:
-                harvest(out)
+                harvest((out, cpack))
         if pending is not None:
             harvest(pending)
         return {k: np.asarray(v) for k, v in logs.items()}

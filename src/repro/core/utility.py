@@ -69,6 +69,25 @@ def predict_grid(params, a: jax.Array, c: jax.Array, bitrates: jax.Array,
     return flat.reshape(I, J, R)
 
 
+@jax.jit
+def utility_table(params, a: jax.Array, c: jax.Array, bitrates: jax.Array,
+                  resolutions: jax.Array, weights: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Traced (util (I, J), best_res (I, J)) fold of the (I, J, R) sweep:
+    lambda-weighted best-resolution utility per (camera, bitrate) — the
+    device-resident allocator's table builder.  The host
+    ``allocation.build_utility_table`` fetches THIS computation, so the two
+    paths are bitwise-identical."""
+    util_r = predict_grid(params, jnp.asarray(a, jnp.float32),
+                          jnp.asarray(c, jnp.float32),
+                          jnp.asarray(bitrates, jnp.float32),
+                          jnp.asarray(resolutions, jnp.float32))  # (I, J, R)
+    best_r_idx = jnp.argmax(util_r, axis=-1)
+    best = jnp.max(util_r, axis=-1) * jnp.asarray(weights, jnp.float32)[:, None]
+    best_res = jnp.asarray(resolutions, jnp.float32)[best_r_idx]
+    return best, best_res
+
+
 def fit(params, features: np.ndarray, targets: np.ndarray, *,
         steps: int = 800, lr: float = 3e-3, seed: int = 0) -> Tuple[Any, float]:
     """features: (n, 4) raw (a, c, b_kbps, r); targets: (n,) measured F1."""

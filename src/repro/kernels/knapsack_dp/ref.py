@@ -59,6 +59,34 @@ def backtrack(choices: np.ndarray, costs: np.ndarray, values: np.ndarray
     return picks, int(np.argmax(np.asarray(values)))
 
 
+def backtrack_jax(choices: jax.Array, costs: jax.Array, values: jax.Array,
+                  Wg: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Traced ``backtrack``: argmax over the value-row prefix w <= Wg, then
+    the reverse cost walk, entirely on device (picks stay device arrays — no
+    host round-trip).  ``Wg`` is the TRACED capacity; ``values``/``choices``
+    come from a sweep at any static capacity >= Wg (row entries w <= Wg are
+    independent of the capacity bound).  The picks match
+    ``backtrack(choices[:, :Wg+1], costs, values[:Wg+1])`` exactly; the
+    second return value is the achieved TOTAL (``ops.solve``'s second
+    element), not the argmax index the host ``backtrack`` returns."""
+    I = choices.shape[0]
+    w_idx = jnp.arange(values.shape[0])
+    masked = jnp.where(w_idx <= Wg, values, NEG)
+    w0 = jnp.argmax(masked).astype(jnp.int32)
+
+    def body(k, carry):
+        w, picks = carry
+        i = I - 1 - k
+        j = choices[i, w]
+        picks = picks.at[i].set(j)
+        w = jnp.maximum(w - costs[j], 0)
+        return w, picks
+
+    _, picks = jax.lax.fori_loop(0, I, body,
+                                 (w0, jnp.zeros((I,), jnp.int32)))
+    return picks, jnp.max(masked)
+
+
 def exhaustive_oracle(util: np.ndarray, costs: np.ndarray, W: int
                       ) -> Tuple[np.ndarray, float]:
     """Brute force over J^I assignments (tests only)."""

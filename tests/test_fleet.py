@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import allocation as alloc
 from repro.core import codec as codec_mod
@@ -196,6 +197,27 @@ def test_greedy_never_beats_dp(rng):
         dp = alloc.allocate_dp(util, res, bitr, W)
         gr = alloc.allocate_greedy(util, res, bitr, W)
         assert gr.predicted_utility <= dp.predicted_utility + 1e-5, trial
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), sat=st.floats(0.25, 0.95),
+       i_cams=st.integers(1, 5), w_scale=st.floats(1.2, 8.0))
+def test_greedy_vs_dp_on_plateaued_tables(seed, sat, i_cams, w_scale):
+    """Plateau coverage for the greedy: tables saturate (sigmoid-style) at
+    high bitrates, giving exactly-equal adjacent entries.  Greedy must never
+    beat the DP, and on a single monotone camera it must MATCH it — crossing
+    the zero-gain plateau instead of stranding budget below it."""
+    bitr = [50, 100, 200, 400, 800]
+    rng_ = np.random.default_rng(seed)
+    raw = np.sort(rng_.uniform(0, 1, (i_cams, len(bitr))), axis=1)
+    util = np.minimum(raw, sat).astype(np.float32)   # exact plateau at `sat`
+    res = np.ones((i_cams, len(bitr)), np.float32)
+    W = 50 * i_cams * w_scale
+    dp = alloc.allocate_dp(util, res, bitr, W)
+    gr = alloc.allocate_greedy(util, res, bitr, W)
+    assert gr.predicted_utility <= dp.predicted_utility + 1e-5
+    if i_cams == 1:
+        assert gr.predicted_utility >= dp.predicted_utility - 1e-5
 
 
 def test_avg_pool_crops_spatial_axes():
