@@ -7,9 +7,16 @@
 # (apart from the scoped per-slot log harvest) on the 8-device mesh, and the
 # D2H fetch counters prove zero per-slot control syncs on the CPU backend,
 # where the guard itself is zero-copy-inert.
+# `ci-episode` is the whole-trace lane: episode runs execute under
+# jax.transfer_guard("disallow") in BOTH directions with NO scoped per-slot
+# exemptions (the guard wraps the entire timed episode inside
+# fleet_episode), on the 8-device mesh plus the 4-device subprocess
+# harness; the fetch counters must show zero 'keep'/'control' and exactly
+# TWO harvest fetches per run (the stacked F1/size pack + the stacked
+# control pack, slot-count independent).
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-quick ci ci-sharded ci-guard
+.PHONY: test bench-quick ci ci-sharded ci-guard ci-episode
 
 test:
 	$(PY) -m pytest -q
@@ -24,4 +31,8 @@ ci-sharded:
 ci-guard:
 	REPRO_FAKE_DEVICES=8 $(PY) -m pytest -q tests/test_control_device.py
 
-ci: test bench-quick ci-sharded ci-guard
+ci-episode:
+	REPRO_FAKE_DEVICES=8 $(PY) -m pytest -q tests/test_episode.py \
+		tests/test_sharded.py::test_episode_sharded_matches_pipelined
+
+ci: test bench-quick ci-sharded ci-guard ci-episode

@@ -92,6 +92,23 @@ def main() -> None:
         result["env"] = env_meta
         (ART / f"{name}.json").write_text(json.dumps(result, indent=2,
                                                      default=str))
+        if "trajectory" in result:
+            _append_trajectory(result["trajectory"], env_meta, args.quick)
+
+
+def _append_trajectory(entry: dict, env_meta: dict, quick: bool) -> None:
+    """Append a perf-trajectory datapoint to BENCH_trajectory.json — the
+    committed per-PR record of the headline comparisons (episode vs
+    pipelined ms/slot), so regressions are visible across PRs.  Quick runs
+    are stamped ``quick=True`` (fewer slots/reps — not comparable to full
+    datapoints)."""
+    path = ART / "BENCH_trajectory.json"
+    history = json.loads(path.read_text()) if path.exists() else []
+    history.append({"date": time.strftime("%Y-%m-%d %H:%M:%S"),
+                    "devices": env_meta["device_count"],
+                    "platform": env_meta["platform"], "quick": quick,
+                    **entry})
+    path.write_text(json.dumps(history, indent=2, default=str))
 
 
 if __name__ == "__main__":

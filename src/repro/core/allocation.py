@@ -110,22 +110,32 @@ def allocate_dp_jax(util: jax.Array, best_res: jax.Array,
     the infeasibility clamp to the minimum bitrate.  One caveat: the grid
     index floors in float32 here vs float64 on the host, so a W within
     float32 ulp of an exact grid multiple can land one unit apart —
-    measure-zero for continuous bandwidth traces."""
+    measure-zero for continuous bandwidth traces.
+
+    The infeasibility clamp is folded into the swept capacity instead of a
+    scalar select on the backtracked picks: at capacity exactly I * cmin
+    (costs are distinct, so cost-cmin options are unique) the DP is FORCED
+    onto the cheapest option for every camera — the very assignment the
+    host path clamps to, total included.  Besides being branchless, this
+    sidesteps an XLA sharding-propagation crash on scalar-broadcast selects
+    over ``fori_loop`` outputs inside shard_map'd scan bodies (the episode
+    runner's control stage)."""
     bitr, d = _grid(bitrates)
     costs = (bitr // d).astype(np.int32)
     I = util.shape[0]
+    cmin = int(costs.min())
+    assert cmin * I <= w_cap, (
+        f"w_cap={w_cap} cannot express the all-minimum clamp for {I} cameras "
+        f"(needs >= {cmin * I}); raise dp_capacity's W_max")
     Wg = jnp.minimum(jnp.floor(jnp.asarray(W_kbps, jnp.float32) / d)
                      .astype(jnp.int32), w_cap)
-    picks_dp, total_dp = dp_ops.solve_device(util, jnp.asarray(costs), Wg,
-                                             w_cap=w_cap,
-                                             use_kernel=use_kernel)
-    jmin = int(np.argmin(costs))
-    infeasible = int(costs.min()) * I > Wg
-    picks = jnp.where(infeasible, jmin, picks_dp)
+    feasible = cmin * I <= Wg
+    picks, total = dp_ops.solve_device(util, jnp.asarray(costs),
+                                       jnp.maximum(Wg, cmin * I),
+                                       w_cap=w_cap, use_kernel=use_kernel)
     b = jnp.asarray(bitr, jnp.float32)[picks]
     res = best_res[jnp.arange(I), picks]
-    total = jnp.where(infeasible, jnp.sum(util[:, jmin]), total_dp)
-    return picks, b, res, total, ~infeasible
+    return picks, b, res, total, feasible
 
 
 def allocate_greedy(util: np.ndarray, best_res: np.ndarray,

@@ -40,17 +40,20 @@ threaded slot to slot.  What runs on device: the elastic EMA/variance/debt
 update, the fused utility-MLP table, the knapsack sweep at ONE static
 bucketed capacity (``allocation.dp_capacity``) with a traced backtrack, the
 traced fair/static pick, and the (extra, area, alloc_kbps, feasible) log
-pack.  What the host still does: segment generation + upload, reducto's
-keep-flag decision (its frame-index arrays are host-built shapes), and
-harvesting the packed per-slot logs — slot t's (F1, sizes) ``host_pack``
-plus the (4,) control pack, both fetched while slot t+1 is in flight.
+pack.  Reducto's keep-flag decision is traced too (``reducto_keep_step``:
+motion -> cross-slot-reference keep mask, consumed by ``keep_selection``
+INSIDE the slot-step), so in the pipelined loop the host only does segment
+generation + upload and the deferred per-slot log harvest — slot t's
+(F1, sizes) ``host_pack`` plus the (4,) control pack, fetched while slot
+t+1 is in flight.
 Transfer-guard guarantee: with ``SystemConfig.alloc="device"`` the timed
 slot loop runs clean under ``jax.transfer_guard_device_to_host("disallow")``
 apart from those explicitly-scoped harvest fetches — the per-slot (a, c)
-host sync of the numpy control path is gone.  (On the CPU backend D2H is
-zero-copy and the guard never fires; there the checkable proof is
-``scheduler.d2h_fetch_counts()``, through which every loop fetch is routed:
-device-alloc runs perform ZERO 'control' fetches.)
+and keep-flag host syncs of the pre-episode paths are gone.  (On the CPU
+backend D2H is zero-copy and the guard never fires; there the checkable
+proof is ``scheduler.d2h_fetch_counts()``, through which every loop fetch
+is routed: device-alloc runs perform ZERO 'control' and ZERO 'keep'
+fetches.)
 The allocator runs on ONE device outside the camera mesh — the knapsack DP
 is a sequential cross-camera recurrence with nothing to shard — so
 camera-sharded (a, c) cross the shard boundary through
@@ -58,6 +61,30 @@ camera-sharded (a, c) cross the shard boundary through
 the resulting (b, r) into the sharded slot-step.  ``fleet_control_scan`` is
 the lax.scan-over-slots variant: a whole short trace's control trajectory
 in one dispatch.
+
+Whole-trace episodes
+--------------------
+``fleet_episode`` closes the remaining host round-trips: a FULL N-slot run
+executes as ONE compiled program per method — ``lax.scan`` over the trace
+of segment generation (``data.synthetic.segments_device``, a traced seeded
+generator: slot t's frames + padded GT are a pure function of (scene
+params, base key, t) via ``jax.random.fold_in``), fleet ROIDet, the control
+step, the traced reducto keep decision and the unified slot-step.  Carry:
+the codec PRNG key chain + ``ElasticStateJax`` + reducto's cross-slot
+reference frames.  Per-slot logs are STACKED on device — (T, 2, C) F1/size
+packs and (T, 4) control packs — and harvested with one fetch at episode
+end, so "what the host still does" shrinks to: build the trace/context
+once, dispatch once, fetch once.  The timed episode runs under
+``jax.transfer_guard("disallow")`` in BOTH directions with NO scoped
+exemptions: zero per-slot H2D uploads and zero per-slot D2H fetches of any
+category, by construction.  Under a camera mesh the scan body is
+shard_map'd whole: per-camera stages run on camera shards, the control
+stage ``all_gather``s (a, c) and runs replicated with the pure-jnp DP (one
+redundant small sweep per device instead of N interpret-mode kernel
+emulations), and each device slices its cameras' (b, r) back out.  The
+pipelined ``run()`` is kept as the ``episode=False`` reference; over the
+same ``DeviceScene`` seeds both modes produce identical logs (the
+equivalence tests assert <= 1e-5; measured diff 0.0).
 
 Mesh & donation
 ---------------
@@ -83,7 +110,7 @@ from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import allocation as alloc_mod
 from repro.core import codec as codec_mod
@@ -92,9 +119,30 @@ from repro.core import roidet as roidet_mod
 from repro.core import utility as util_mod
 from repro.core.codec import CodecConfig
 from repro.core.elastic import ElasticConfig, ElasticStateJax
+from repro.data import synthetic as synth_mod
+from repro.data.synthetic import DeviceSceneParams, SceneConfig
+from repro.kernels.edge_motion import ops as em_ops
 from repro.models import detector as det
-from repro.sharding.rules import (mesh_cache_key, pad_cameras, pad_leading,
+from repro.sharding.rules import (cached_sharded_jit, mesh_cache_key,
+                                  pad_cameras, pad_leading,
                                   reshard_replicated, sharded_jit, unshard)
+
+# block-motion mass above which a frame counts as "changed" (reducto keep
+# rule) — shared by the sequential, pipelined-traced and episode paths,
+# which must stay bit-in-sync for the cross-mode equivalence guarantees
+MOTION_KEEP_THRESH = 25.0
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _key_chain(key: jax.Array, n: int) -> Tuple[jax.Array, jax.Array]:
+    """n sequential key splits in ONE dispatch.  Bit-identical to repeatedly
+    calling ``key, k = jax.random.split(key)`` on the host, so the fleet
+    paths (pipelined loop AND episode scan) draw exactly the keys the
+    per-camera loop would."""
+    def step(k, _):
+        k, sub = jax.random.split(k)
+        return k, sub
+    return jax.lax.scan(step, key, None, length=n)
 
 
 class FleetSlotOut(NamedTuple):
@@ -107,31 +155,92 @@ class FleetSlotOut(NamedTuple):
     valid: jax.Array       # (C, F, K)
 
 
+class KeepSelection(NamedTuple):
+    """Traced kept/missed eval-frame selection derived from a keep mask —
+    the fixed-shape device equivalent of the host-side index building the
+    pre-episode loop did in ``scheduler._reducto_fleet_inputs``."""
+    n_eff: jax.Array     # (C,) float32 kept-frame counts (codec charge)
+    eval_idx: jax.Array  # (C, F) int32 kept frames scored for F1
+    eval_w: jax.Array    # (C, F) float32 per-frame weights (rows sum to 1)
+    reuse_idx: jax.Array # (C,) int32 last kept frame (the reuse detection)
+    miss_idx: jax.Array  # (C, F) int32 filtered-out frames the reuse scores
+    miss_w: jax.Array    # (C, F) float32 (all-zero rows = arm inert)
+    w_keep: jax.Array    # (C,) float32 arm mix (1 = reuse arm off)
+
+
+def _linspace_sel(count: jax.Array, F: int) -> Tuple[jax.Array, jax.Array]:
+    """Traced ``eval_indices``: min(F, count) evenly spaced positions over a
+    length-``count`` list, padded by repeating the last pick.  Integer math
+    — exhaustively verified equal to the host
+    ``np.linspace(0, n-1, f).astype(int)`` truncation for every n <= 128,
+    f <= 10 (``keep_selection`` asserts that envelope: np.linspace's float64
+    rounding can truncate an exact integer grid point one lower, first at
+    n=123/f=15, where the integer form is the mathematically exact one).
+    Returns (positions (C, F) int32, f_eff (C,) int32)."""
+    j = jnp.arange(F, dtype=jnp.int32)[None, :]
+    count = jnp.maximum(count.astype(jnp.int32), 1)[:, None]     # (C, 1)
+    f_eff = jnp.minimum(F, count)
+    jj = jnp.minimum(j, f_eff - 1)
+    pos = (jj * (count - 1)) // jnp.maximum(f_eff - 1, 1)
+    return pos, f_eff[:, 0]
+
+
+def keep_selection(keep: jax.Array, F: int) -> KeepSelection:
+    """keep (C, N) bool (>= 1 True per row) -> every selection the slot step
+    needs, computed on device with masked fixed-shape gathers.  For an
+    all-True row (every non-reducto method) this degenerates exactly to the
+    static ``eval_indices(N, F)`` spread with uniform weights, reuse frame =
+    last raw frame, zero miss weights and w_keep = 1 — method routing stays
+    pure data, ONE executable serves all four methods."""
+    C, N = keep.shape
+    # the host-equivalence envelope _linspace_sel is verified for
+    assert N <= 128 and F <= 10, (N, F)
+    kept_pos = jnp.argsort(~keep, axis=1, stable=True)   # kept first, ascending
+    miss_pos = jnp.argsort(keep, axis=1, stable=True)    # missed first
+    m = jnp.sum(keep, axis=1).astype(jnp.int32)
+    n_miss = N - m
+    ev_p, f_eff = _linspace_sel(m, F)
+    eval_idx = jnp.take_along_axis(kept_pos, ev_p, axis=1).astype(jnp.int32)
+    j = jnp.arange(F, dtype=jnp.int32)[None, :]
+    eval_w = jnp.where(j < f_eff[:, None],
+                       1.0 / jnp.maximum(f_eff[:, None], 1), 0.0
+                       ).astype(jnp.float32)
+    ms_p, fm_eff = _linspace_sel(n_miss, F)
+    miss_idx = jnp.take_along_axis(miss_pos, ms_p, axis=1).astype(jnp.int32)
+    miss_w = jnp.where((j < fm_eff[:, None]) & (n_miss[:, None] > 0),
+                       1.0 / jnp.maximum(fm_eff[:, None], 1), 0.0
+                       ).astype(jnp.float32)
+    reuse_idx = jnp.take_along_axis(kept_pos, jnp.maximum(m - 1, 0)[:, None],
+                                    axis=1)[:, 0].astype(jnp.int32)
+    return KeepSelection(
+        n_eff=m.astype(jnp.float32), eval_idx=eval_idx, eval_w=eval_w,
+        reuse_idx=reuse_idx, miss_idx=miss_idx, miss_w=miss_w,
+        w_keep=jnp.mean(keep.astype(jnp.float32), axis=1))
+
+
 def _slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
                masks: jax.Array, b: jax.Array, r: jax.Array, keys: jax.Array,
-               n_eff: jax.Array, eval_idx: jax.Array, eval_w: jax.Array,
-               gt_boxes: jax.Array, gt_valid: jax.Array, reuse_idx: jax.Array,
-               miss_boxes: jax.Array, miss_valid: jax.Array,
-               miss_w: jax.Array, w_keep: jax.Array, *, block_size: int,
-               conf_thresh: float, with_reuse: bool) -> FleetSlotOut:
+               keep: jax.Array, gt_boxes: jax.Array, gt_valid: jax.Array, *,
+               eval_frames: int, block_size: int, conf_thresh: float,
+               with_reuse: bool) -> FleetSlotOut:
     """The traced slot step for C cameras (C local under shard_map).
 
-    frames (C,N,H,W); masks (C,H/bs,W/bs) bool; b, r, n_eff (C,) traced;
-    keys (C,2); eval_idx (C,F) int32 frame indices to score with per-frame
-    weights eval_w (C,F) (rows sum to 1); gt_boxes (C,F,G,4) /
-    gt_valid (C,F,G) padded ground truth for those frames;
-    reuse_idx (C,) raw-frame index whose detections the reuse arm replays;
-    miss_boxes/miss_valid (C,Fm,G,..) GT of filtered-out frames with weights
-    miss_w (C,Fm); w_keep (C,) mixes the arms (1 = reuse arm off).
-    ``with_reuse=False`` (static) drops the reuse arm from the program
-    entirely — the profiling sweep's batch shape is its own specialization
-    anyway, so it skips the arm's dead detector/F1 work; ``run()`` always
-    compiles with the arm so all four methods share one executable.
+    frames (C,N,H,W); masks (C,H/bs,W/bs) bool; b, r (C,) traced; keys
+    (C,2); keep (C,N) bool frame keep-flags (all-True for every non-reducto
+    method); gt_boxes (C,N,G,4) / gt_valid (C,N,G) padded ground truth for
+    ALL N frames — which frames get scored is decided ON DEVICE by
+    ``keep_selection`` (kept-frame eval spread, filtered-frame reuse scoring,
+    per-camera arm weights), so no host-built index array ever enters the
+    program.  ``with_reuse=False`` (profiling) drops the reuse arm from the
+    program entirely — the profiling sweep's batch shape is its own
+    specialization anyway, so it skips the arm's dead detector/F1 work;
+    ``run()`` always compiles with the arm so all four methods share one
+    executable.
     """
     C, N, H, W = frames.shape
-    F = eval_idx.shape[1]
-    Fm = miss_boxes.shape[1]
     G = gt_boxes.shape[2]
+    F = min(eval_frames, N)
+    sel = keep_selection(keep, F)
 
     def encode_one(fr, mask, b_i, r_i, key_i, n_i):
         cropped = roidet_mod.crop_to_mask(fr, mask, block_size)
@@ -139,38 +248,97 @@ def _slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
         return codec_mod.encode_segment(cfg, cropped, roi_pixels, b_i, r_i,
                                         key_i, num_frames=n_i)
 
-    decoded, sizes = jax.vmap(encode_one)(frames, masks, b, r, keys, n_eff)
-    ev = jnp.take_along_axis(decoded, eval_idx[:, :, None, None], axis=1)
+    decoded, sizes = jax.vmap(encode_one)(frames, masks, b, r, keys,
+                                          sel.n_eff)
+    ev = jnp.take_along_axis(decoded, sel.eval_idx[:, :, None, None], axis=1)
     batch = ev.reshape(C * F, H, W)
     if with_reuse:
         # reuse frames are RAW camera frames (the camera ran its own detector
         # on them before filtering) — folded into the same server forward
         reuse_fr = jnp.take_along_axis(
-            frames, reuse_idx[:, None, None, None], axis=1)[:, 0]
+            frames, sel.reuse_idx[:, None, None, None], axis=1)[:, 0]
         batch = jnp.concatenate([batch, reuse_fr], axis=0)
     grid = det.forward(server_params, batch)
     boxes, scores, valid = det.decode_boxes(grid, conf_thresh=conf_thresh)
     K = boxes.shape[1]
 
+    gt_e = jnp.take_along_axis(gt_boxes, sel.eval_idx[:, :, None, None],
+                               axis=1)
+    gv_e = jnp.take_along_axis(gt_valid, sel.eval_idx[:, :, None], axis=1)
     f1_frames = det.f1_score_batch(
-        boxes[:C * F], valid[:C * F], gt_boxes.reshape(C * F, G, 4),
-        gt_valid.reshape(C * F, G)).reshape(C, F)
-    f1 = jnp.sum(f1_frames * eval_w, axis=1)
+        boxes[:C * F], valid[:C * F], gt_e.reshape(C * F, G, 4),
+        gv_e.reshape(C * F, G)).reshape(C, F)
+    f1 = jnp.sum(f1_frames * sel.eval_w, axis=1)
     if with_reuse:
         # detection-reuse arm: the reuse frame's detections score every
         # filtered-out frame's GT; miss_w rows are zero when the arm is off
-        rb = jnp.repeat(boxes[C * F:], Fm, axis=0)
-        rv = jnp.repeat(valid[C * F:], Fm, axis=0)
+        gt_m = jnp.take_along_axis(gt_boxes, sel.miss_idx[:, :, None, None],
+                                   axis=1)
+        gv_m = jnp.take_along_axis(gt_valid, sel.miss_idx[:, :, None], axis=1)
+        rb = jnp.repeat(boxes[C * F:], F, axis=0)
+        rv = jnp.repeat(valid[C * F:], F, axis=0)
         f1_miss = det.f1_score_batch(
-            rb, rv, miss_boxes.reshape(C * Fm, G, 4),
-            miss_valid.reshape(C * Fm, G)).reshape(C, Fm)
-        f1 = f1 * w_keep + jnp.sum(f1_miss * miss_w, axis=1) * (1.0 - w_keep)
+            rb, rv, gt_m.reshape(C * F, G, 4),
+            gv_m.reshape(C * F, G)).reshape(C, F)
+        f1 = (f1 * sel.w_keep
+              + jnp.sum(f1_miss * sel.miss_w, axis=1) * (1.0 - sel.w_keep))
     return FleetSlotOut(
         f1=f1, f1_frames=f1_frames, sizes=sizes,
         host_pack=jnp.stack([f1, sizes]),
         boxes=boxes[:C * F].reshape(C, F, K, 4),
         scores=scores[:C * F].reshape(C, F, K),
         valid=valid[:C * F].reshape(C, F, K))
+
+
+# -- traced reducto keep-flags ------------------------------------------------
+
+def _reducto_keep_impl(frames: jax.Array, ref: jax.Array, first: jax.Array, *,
+                       block_size: int, edge_thresh: float,
+                       use_kernel: bool) -> Tuple[jax.Array, jax.Array]:
+    """Traced reducto keep decision with a CROSS-SLOT reference: frame 0's
+    motion score is computed against the last kept frame of the previous
+    slot (the frame whose detections the camera reuses — real Reducto
+    filters against the last transmitted frame, it does not reset per
+    segment), frames 1..N-1 against their predecessor.  Forced-keep rules:
+    the first slot of a run keeps frame 0 (no reference exists yet), and an
+    all-quiet slot keeps frame 0 so every slot transmits >= 1 frame.
+    Returns (keep (C, N) bool, new reference frames (C, H, W)); everything
+    stays on device — the pre-episode per-slot 'keep' D2H fetch is gone."""
+    N = frames.shape[1]
+    ref = jnp.where(first, frames[:, 0], ref)
+    allf = jnp.concatenate([ref[:, None], frames], axis=1)   # (C, N+1, H, W)
+    sc = em_ops._segment_motion_fleet_impl(
+        allf, block_size=block_size, edge_thresh=edge_thresh, tile_rows=None,
+        use_kernel=use_kernel)                               # (C, N, M, Nb)
+    raw = jnp.sum(sc, axis=(2, 3)) > MOTION_KEEP_THRESH
+    keep = raw.at[:, 0].set(raw[:, 0] | first | ~jnp.any(raw, axis=1))
+    last = (N - 1) - jnp.argmax(jnp.flip(keep, axis=1), axis=1)
+    new_ref = jnp.take_along_axis(frames, last[:, None, None, None],
+                                  axis=1)[:, 0]
+    return keep, new_ref
+
+
+def reducto_keep_step(frames: jax.Array, ref: jax.Array, first, *,
+                      block_size: int,
+                      edge_thresh: float = roidet_mod.EDGE_THRESH,
+                      use_kernel: bool = True, mesh: Optional[Mesh] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Dispatch the traced keep decision (camera-sharded when a mesh is
+    given) WITHOUT blocking: (keep, new ref) come back as device arrays that
+    feed ``fleet_slot_step`` / the next slot's keep step directly."""
+    cam = P("camera")
+    fn = cached_sharded_jit(
+        _reducto_keep_impl,
+        dict(block_size=block_size, edge_thresh=edge_thresh,
+             use_kernel=use_kernel),
+        mesh, in_specs=(cam, cam, P()), out_specs=(cam, cam))
+    C = frames.shape[0]
+    C_pad = pad_cameras(C, mesh)
+    keep, new_ref = fn(pad_leading(frames, C_pad), pad_leading(ref, C_pad),
+                       jnp.asarray(first, bool))
+    if C_pad != C:
+        keep, new_ref = keep[:C], new_ref[:C]
+    return keep, new_ref
 
 
 # -- executable cache: one compiled program per (mesh, config, statics) -------
@@ -180,10 +348,11 @@ _COMPILE_COUNTS: Dict[Tuple, int] = {}
 
 
 def _build_executable(cache_key: Tuple, mesh: Optional[Mesh],
-                      cfg: CodecConfig, block_size: int, conf_thresh: float,
-                      donate: bool, with_reuse: bool):
-    impl = functools.partial(_slot_step, cfg, block_size=block_size,
-                             conf_thresh=conf_thresh, with_reuse=with_reuse)
+                      cfg: CodecConfig, eval_frames: int, block_size: int,
+                      conf_thresh: float, donate: bool, with_reuse: bool):
+    impl = functools.partial(_slot_step, cfg, eval_frames=eval_frames,
+                             block_size=block_size, conf_thresh=conf_thresh,
+                             with_reuse=with_reuse)
 
     def counted(*args):
         # this Python side effect runs exactly once per new jit
@@ -192,25 +361,26 @@ def _build_executable(cache_key: Tuple, mesh: Optional[Mesh],
         return impl(*args)
 
     cam = P("camera")
-    in_specs = (P(),) + (cam,) * 15
+    in_specs = (P(),) + (cam,) * 8
     out_specs = FleetSlotOut(cam, cam, cam, P(None, "camera"), cam, cam, cam)
-    # donate the big per-slot buffers: frames(1), gt(9,10), miss gt (12,13) —
-    # positions in the (server_params, frames, masks, b, r, keys, n_eff,
-    # eval_idx, eval_w, gt_boxes, gt_valid, reuse_idx, miss_boxes, miss_valid,
-    # miss_w, w_keep) argument list.  masks stay undonated: callers hold the
-    # ROIDet mask for the sequential-equivalence comparisons.
-    donate_argnums = (1, 9, 10, 12, 13) if donate else ()
+    # donate the big per-slot buffers: frames(1), gt(7,8) — positions in the
+    # (server_params, frames, masks, b, r, keys, keep, gt_boxes, gt_valid)
+    # argument list.  masks stay undonated: callers hold the ROIDet mask for
+    # the sequential-equivalence comparisons.
+    donate_argnums = (1, 7, 8) if donate else ()
     return sharded_jit(counted, mesh, in_specs, out_specs, donate_argnums)
 
 
-def _get_executable(mesh: Optional[Mesh], cfg: CodecConfig, block_size: int,
-                    conf_thresh: float, donate: bool, with_reuse: bool):
-    key = (mesh_cache_key(mesh), cfg, block_size, conf_thresh, donate,
-           with_reuse)
+def _get_executable(mesh: Optional[Mesh], cfg: CodecConfig, eval_frames: int,
+                    block_size: int, conf_thresh: float, donate: bool,
+                    with_reuse: bool):
+    key = (mesh_cache_key(mesh), cfg, eval_frames, block_size, conf_thresh,
+           donate, with_reuse)
     fn = _EXEC_CACHE.get(key)
     if fn is None:
         fn = _EXEC_CACHE[key] = _build_executable(
-            key, mesh, cfg, block_size, conf_thresh, donate, with_reuse)
+            key, mesh, cfg, eval_frames, block_size, conf_thresh, donate,
+            with_reuse)
     return fn
 
 
@@ -371,11 +541,8 @@ def fleet_control_scan(method: str, mlp_params, jcab_util, jcab_res, lam,
 
 def fleet_slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
                     masks: jax.Array, b: jax.Array, r: jax.Array,
-                    keys: jax.Array, n_eff: jax.Array, eval_idx: jax.Array,
-                    eval_w: jax.Array, gt_boxes: jax.Array,
-                    gt_valid: jax.Array, reuse_idx: jax.Array,
-                    miss_boxes: jax.Array, miss_valid: jax.Array,
-                    miss_w: jax.Array, w_keep: jax.Array, *, block_size: int,
+                    keys: jax.Array, keep: jax.Array, gt_boxes: jax.Array,
+                    gt_valid: jax.Array, *, eval_frames: int, block_size: int,
                     conf_thresh: float = 0.4, mesh: Optional[Mesh] = None,
                     donate: bool = True, with_reuse: bool = True
                     ) -> FleetSlotOut:
@@ -390,32 +557,242 @@ def fleet_slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
         b = pad_leading(b, C_pad, fill=1.0)
         r = pad_leading(r, C_pad, fill=1.0)
         keys = pad_leading(keys, C_pad)
-        n_eff = pad_leading(n_eff, C_pad, fill=1.0)
-        eval_idx = pad_leading(eval_idx, C_pad)
-        eval_w = pad_leading(eval_w, C_pad)
+        keep = pad_leading(keep, C_pad, fill=True)
         gt_boxes = pad_leading(gt_boxes, C_pad)
         gt_valid = pad_leading(gt_valid, C_pad)
-        reuse_idx = pad_leading(reuse_idx, C_pad)
-        miss_boxes = pad_leading(miss_boxes, C_pad)
-        miss_valid = pad_leading(miss_valid, C_pad)
-        miss_w = pad_leading(miss_w, C_pad)
-        w_keep = pad_leading(w_keep, C_pad, fill=1.0)
-    fn = _get_executable(mesh, cfg, block_size, conf_thresh, donate,
-                         with_reuse)
+    fn = _get_executable(mesh, cfg, eval_frames, block_size, conf_thresh,
+                         donate, with_reuse)
     with warnings.catch_warnings():
         # donated frame/GT buffers can't alias the (small) outputs; XLA still
         # recycles them for intermediates, which is the point — drop the nag
         # (pytest re-enables default filters, so module scope isn't enough)
         warnings.filterwarnings("ignore",
                                 message=".*donated buffers were not usable.*")
-        out = fn(server_params, frames, masks, b, r, keys, n_eff, eval_idx,
-                 eval_w, gt_boxes, gt_valid, reuse_idx, miss_boxes,
-                 miss_valid, miss_w, w_keep)
+        out = fn(server_params, frames, masks, b, r, keys, keep, gt_boxes,
+                 gt_valid)
     if C_pad != C:
         out = FleetSlotOut(
             f1=out.f1[:C], f1_frames=out.f1_frames[:C], sizes=out.sizes[:C],
             host_pack=out.host_pack[:, :C], boxes=out.boxes[:C],
             scores=out.scores[:C], valid=out.valid[:C])
+    return out
+
+
+# -- whole-trace episode runner ----------------------------------------------
+
+class EpisodeOut(NamedTuple):
+    packs: jax.Array       # (T, 2, C) stacked [f1; sizes] per slot
+    cpacks: jax.Array      # (T, 4) [extra, area, alloc_kbps, feasible]
+    key: jax.Array         # final codec PRNG key (threads into the next run)
+    est: ElasticStateJax   # final elastic state
+
+
+_EPISODE_COMPILE_COUNTS: Dict[Tuple, int] = {}
+
+
+def episode_compile_count() -> int:
+    """Traced specializations of the episode executables (one per
+    (method, mesh, config) — a timed re-run must add zero)."""
+    return sum(_EPISODE_COMPILE_COUNTS.values())
+
+
+def _episode_impl(server_params, light_params, mlp_params, jcab_util,
+                  jcab_res, lam, scene_params: DeviceSceneParams,
+                  trace, t_idx, t_first, key0, skey, tau_wl, tau_wh,
+                  est0: ElasticStateJax, ref0, *, method: str,
+                  scfg: SceneConfig, ccfg: CodecConfig, ecfg: ElasticConfig,
+                  bitrates: Tuple[int, ...], resolutions: Tuple[float, ...],
+                  use_elastic: bool, use_kernel: bool, w_cap: int,
+                  num_cams: int, c_pad: int, eval_frames: int,
+                  block_size: int, conf_thresh: float, gt_pad: int,
+                  sharded: bool) -> EpisodeOut:
+    """One whole bandwidth trace as ONE traced program (runs per-device
+    under shard_map when ``sharded``): ``lax.scan`` of segment-gen ->
+    ROIDet -> control -> keep -> slot-step over the (T,) trace.  Carry:
+    codec PRNG key + ``ElasticStateJax`` + reducto's cross-slot reference
+    frames.  Logs are STACKED on device and harvested once by the caller —
+    nothing inside the scan ever touches the host.
+
+    Sharding: everything per-camera runs on the local camera shard; the
+    control step is the one cross-camera stage, so its (a, c) features are
+    ``all_gather``-ed over the "camera" axis and the control program runs
+    replicated (pure-jnp DP — ``use_kernel=False`` — so replication costs
+    redundant flops, not N interpret-mode kernel emulations), each device
+    slicing its own cameras' (b, r) back out."""
+    N, H, W = scfg.frames_per_segment, scfg.height, scfg.width
+    n_local = scene_params.backgrounds.shape[0]   # == c_pad / D under shard_map
+
+    def gather(x):
+        """local (n_local,) -> global (num_cams,) — mesh padding dropped."""
+        if sharded:
+            x = jax.lax.all_gather(x, "camera", axis=0, tiled=True)
+        return x[:num_cams]
+
+    def scatter(x, fill):
+        """global (num_cams, ...) -> this device's (n_local, ...) rows."""
+        if c_pad > num_cams:
+            pad = jnp.full((c_pad - num_cams,) + x.shape[1:], fill, x.dtype)
+            x = jnp.concatenate([x, pad], axis=0)
+        if not sharded:
+            return x
+        i = jax.lax.axis_index("camera")
+        return jax.lax.dynamic_slice_in_dim(x, i * n_local, n_local, 0)
+
+    def step(carry, xs):
+        key, est, ref = carry
+        t, W_t = xs
+        frames, gtb, gtv = synth_mod.segments_device(
+            scfg, scene_params, skey, t, gt_pad=gt_pad)
+        key, keys_g = _key_chain(key, num_cams)           # replicated chain
+        keys_l = scatter(keys_g, 0)
+        a = c = None
+        if method in ("deepstream", "deepstream_no_elastic"):
+            roi = roidet_mod._roidet_fleet_impl(
+                frames, light_params, block_size=block_size,
+                motion_thresh=roidet_mod.MOTION_THRESH,
+                edge_thresh=roidet_mod.EDGE_THRESH,
+                conf_thresh=roidet_mod.CONF_THRESH,
+                use_kernel=use_kernel, max_boxes=roidet_mod.MAX_BOXES)
+            masks = roi.mask
+            a, c = gather(roi.area_ratio), gather(roi.confidence)
+        else:
+            masks = jnp.ones((n_local, H // block_size, W // block_size),
+                             bool)
+        co = _control_impl(
+            mlp_params, jcab_util, jcab_res, lam, a, c, W_t, est,
+            tau_wl, tau_wh, method=method, ecfg=ecfg, bitrates=bitrates,
+            resolutions=resolutions, slot_seconds=ccfg.slot_seconds,
+            use_elastic=use_elastic, use_kernel=False, w_cap=w_cap,
+            num_cams=num_cams)
+        b_l, r_l = scatter(co.b, 1.0), scatter(co.r, 1.0)
+        if method == "reducto":
+            # "first slot" is per-RUN (t == t_first), matching the pipelined
+            # loop's per-run reference reset — a resumed episode
+            # (t_start > 0 on a reused scene) force-keeps frame 0 of ITS
+            # first slot, not of global slot 0
+            keep, ref = _reducto_keep_impl(
+                frames, ref, t == t_first, block_size=block_size,
+                edge_thresh=roidet_mod.EDGE_THRESH, use_kernel=use_kernel)
+        else:
+            keep = jnp.ones((n_local, N), bool)
+        out = _slot_step(ccfg, server_params, frames, masks, b_l, r_l,
+                         keys_l, keep, gtb, gtv, eval_frames=eval_frames,
+                         block_size=block_size, conf_thresh=conf_thresh,
+                         with_reuse=True)
+        return (key, co.est, ref), (out.host_pack, co.pack)
+
+    (key, est, ref), (packs, cpacks) = jax.lax.scan(
+        step, (key0, est0, ref0), (t_idx, trace))
+    return EpisodeOut(packs=packs, cpacks=cpacks, key=key, est=est)
+
+
+def _get_episode_executable(mesh: Optional[Mesh], **statics):
+    key = ("episode", mesh_cache_key(mesh)) + tuple(sorted(statics.items()))
+    fn = _EXEC_CACHE.get(key)
+    if fn is not None:
+        return fn
+    impl = functools.partial(_episode_impl, **statics)
+
+    def counted(*args):
+        _EPISODE_COMPILE_COUNTS[key] = _EPISODE_COMPILE_COUNTS.get(key, 0) + 1
+        return impl(*args)
+
+    cam = P("camera")
+    # (server, light, mlp, jcab_util, jcab_res, lam) replicated (P() is a
+    # pytree prefix, so it covers whole param trees); scene params carry
+    # their own per-field specs; carries/trace replicated; ref0 sharded
+    in_specs = (P(), P(), P(), P(), P(), P(), DeviceSceneParams.pspecs(),
+                P(), P(), P(), P(), P(), P(), P(), P(), cam)
+    out_specs = EpisodeOut(P(None, None, "camera"), P(), P(), P())
+    fn = _EXEC_CACHE[key] = sharded_jit(counted, mesh, in_specs, out_specs)
+    return fn
+
+
+def fleet_episode(method: str, *, codec_cfg: CodecConfig,
+                  scene_cfg: SceneConfig, server_params, light_params,
+                  mlp_params, jcab_util, jcab_res, lam,
+                  scene_params: DeviceSceneParams, trace: jax.Array,
+                  key0: jax.Array, skey: jax.Array, tau_wl, tau_wh,
+                  est0: ElasticStateJax, ecfg: ElasticConfig,
+                  bitrates: Sequence[int], resolutions: Sequence[float],
+                  use_elastic: bool, w_cap: int, num_cams: int,
+                  eval_frames: int, block_size: int, use_kernel: bool = True,
+                  conf_thresh: float = 0.4, gt_pad: int = 16,
+                  t_start: int = 0, mesh: Optional[Mesh] = None
+                  ) -> EpisodeOut:
+    """Dispatch a WHOLE bandwidth trace as one compiled episode.
+
+    Every argument must already be device-resident (the scheduler's
+    ``run_episode`` prepares them before its timed region); this wrapper
+    only pads the camera axis, places sharded operands with explicit
+    ``device_put`` (allowed under ``jax.transfer_guard("disallow")``, which
+    blocks implicit transfers only) and calls the cached executable.
+    Returns stacked (T, 2, C) log packs + (T, 4) control packs as device
+    arrays — ONE harvest fetch at episode end is all the host ever does."""
+    # the DP backtrack is only shard_map-scan-safe in its unrolled (<= 64
+    # camera) form — fail loudly instead of hitting the XLA CHECK abort the
+    # fori_loop fallback would trigger inside this scan (see backtrack_jax)
+    assert num_cams <= 64, (
+        f"fleet_episode supports <= 64 cameras (got {num_cams}): the "
+        "knapsack backtrack must take its unrolled form inside the "
+        "shard_map'd scan body")
+    C_pad = pad_cameras(num_cams, mesh)
+    scene_params = synth_mod.pad_scene_params(scene_params, C_pad)
+    # the traced generator reads only shape-like SceneConfig fields (N, H,
+    # W, noise_std) — the seed lives in the DEVICE params, so normalize it
+    # out of the static cache key or every new scene would re-trace
+    import dataclasses as _dc
+    scene_cfg = _dc.replace(scene_cfg, seed=0)
+    T = trace.shape[0]
+    ref0 = jnp.zeros((C_pad, scene_cfg.height, scene_cfg.width), jnp.float32)
+    J = len(bitrates)
+    if jcab_util is None:
+        jcab_util = jnp.zeros((num_cams, J), jnp.float32)
+        jcab_res = jnp.ones((num_cams, J), jnp.float32)
+    if mlp_params is None:
+        mlp_params = {}
+    fn = _get_episode_executable(
+        mesh, method=method, scfg=scene_cfg, ccfg=codec_cfg, ecfg=ecfg,
+        bitrates=tuple(int(b) for b in bitrates),
+        resolutions=tuple(float(r) for r in resolutions),
+        use_elastic=bool(use_elastic), use_kernel=bool(use_kernel),
+        w_cap=int(w_cap), num_cams=int(num_cams), c_pad=int(C_pad),
+        eval_frames=int(eval_frames), block_size=int(block_size),
+        conf_thresh=float(conf_thresh), gt_pad=int(gt_pad),
+        sharded=mesh is not None)
+    # slot indices continue from the scene's cursor (t_start) — data values,
+    # not statics, so resumed episodes reuse the same executable; t_first
+    # marks this RUN's first slot (reducto's reference-reset rule)
+    t_idx = jnp.arange(T, dtype=jnp.int32) + jnp.int32(t_start)
+    t_first = jnp.int32(t_start)
+    if mesh is not None:
+        # EXPLICIT mesh placement of every operand (replicated params and
+        # camera-sharded scene state) — jit would otherwise reshard
+        # implicitly at arg-binding time, which the transfer guard below
+        # rightly rejects
+        cam_sh = NamedSharding(mesh, P("camera"))
+        rep_sh = NamedSharding(mesh, P())
+        rep = lambda tree: jax.tree.map(
+            lambda x: jax.device_put(x, rep_sh), tree)
+        scene_params = DeviceSceneParams(*(
+            jax.device_put(x, cam_sh if s == P("camera") else rep_sh)
+            for x, s in zip(scene_params, DeviceSceneParams.pspecs())))
+        ref0 = jax.device_put(ref0, cam_sh)
+        (server_params, light_params, mlp_params, jcab_util, jcab_res, lam,
+         trace, t_idx, t_first, key0, skey, tau_wl, tau_wh, est0) = rep(
+            (server_params, light_params, mlp_params, jcab_util, jcab_res,
+             lam, trace, t_idx, t_first, key0, skey, tau_wl, tau_wh, est0))
+    # the timed episode proper: everything is device-resident by now, so the
+    # whole T-slot trace executes under the transfer guard in BOTH
+    # directions with NO scoped exemptions — any per-slot upload or fetch
+    # would trip it (the zero-H2D/zero-D2H acceptance check)
+    with jax.transfer_guard("disallow"):
+        out = fn(server_params, light_params, mlp_params, jcab_util,
+                 jcab_res, lam, scene_params, trace, t_idx, t_first, key0,
+                 skey, tau_wl, tau_wh, est0, ref0)
+        jax.block_until_ready(out.packs)
+    if C_pad != num_cams:
+        out = out._replace(packs=out.packs[:, :, :num_cams])
     return out
 
 
@@ -459,22 +836,10 @@ def pad_gt(gts: Sequence[Sequence[Sequence[Tuple]]],
     return boxes, valid
 
 
-def neutral_reuse_inputs(C: int, F: int, G: int, n_frames: int
-                         ) -> Dict[str, np.ndarray]:
-    """Inputs that switch the reuse arm OFF (deepstream/jcab/static): w_keep=1
-    so the miss term contributes exactly zero; reuse frame = last raw frame."""
-    return dict(
-        reuse_idx=np.full(C, n_frames - 1, np.int32),
-        miss_boxes=np.zeros((C, F, G, 4), np.float32),
-        miss_valid=np.zeros((C, F, G), bool),
-        miss_w=np.zeros((C, F), np.float32),
-        w_keep=np.ones(C, np.float32))
-
-
-def uniform_eval_weights(C: int, F: int, m: Optional[np.ndarray] = None
-                         ) -> np.ndarray:
-    """(C, F) weights averaging the first m (default all F) eval frames."""
-    if m is None:
-        return np.full((C, F), 1.0 / F, np.float32)
-    w = (np.arange(F)[None, :] < m[:, None]).astype(np.float32)
-    return w / np.maximum(m[:, None], 1)
+def pad_gt_all(gts: Sequence[Sequence[Sequence[Tuple]]], num_frames: int,
+               G: int = 16) -> Tuple[np.ndarray, np.ndarray]:
+    """``pad_gt`` over EVERY frame of the slot: (C, N, G, 4)/(C, N, G) —
+    the unified slot-step scores traced frame selections, so it consumes the
+    whole slot's GT and gathers on device."""
+    idx = np.tile(np.arange(num_frames), (len(gts), 1))
+    return pad_gt(gts, idx, G=G)

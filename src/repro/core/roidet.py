@@ -28,6 +28,15 @@ from repro.models import detector as det
 from repro.sharding.rules import cached_sharded_jit, pad_cameras, pad_leading
 
 
+# shared defaults for EVERY ROIDet entry point — the single-camera path,
+# the fleet path and the episode scan must stay numerically identical, so
+# they all read these instead of restating literals
+MOTION_THRESH = 16.0
+EDGE_THRESH = 0.35
+CONF_THRESH = 0.25
+MAX_BOXES = 16
+
+
 class ROIResult(NamedTuple):
     mask: jax.Array        # (M, N) bool — block-grid ROI coverage
     area_ratio: jax.Array  # scalar in [0,1] — feature `a`
@@ -81,9 +90,10 @@ def _roi_union(D: jax.Array, dboxes: jax.Array, dvalid: jax.Array, M: int,
     "block_size", "use_kernel", "max_boxes", "motion_thresh", "edge_thresh",
     "conf_thresh"))
 def roidet(frames: jax.Array, det_params: Any, *, block_size: int = 8,
-           motion_thresh: float = 16.0, edge_thresh: float = 0.35,
-           conf_thresh: float = 0.25, use_kernel: bool = True,
-           max_boxes: int = 16) -> ROIResult:
+           motion_thresh: float = MOTION_THRESH,
+           edge_thresh: float = EDGE_THRESH,
+           conf_thresh: float = CONF_THRESH, use_kernel: bool = True,
+           max_boxes: int = MAX_BOXES) -> ROIResult:
     """frames: (N, H, W) float32 in [0,1] — one camera's segment."""
     N_f, H, W = frames.shape
     M, N = H // block_size, W // block_size
@@ -147,9 +157,10 @@ def _roidet_fleet_impl(frames: jax.Array, det_params: Any, *, block_size: int,
 
 
 def roidet_fleet(frames: jax.Array, det_params: Any, *, block_size: int = 8,
-                 motion_thresh: float = 16.0, edge_thresh: float = 0.35,
-                 conf_thresh: float = 0.25, use_kernel: bool = True,
-                 max_boxes: int = 16, mesh: Optional[Mesh] = None
+                 motion_thresh: float = MOTION_THRESH,
+                 edge_thresh: float = EDGE_THRESH,
+                 conf_thresh: float = CONF_THRESH, use_kernel: bool = True,
+                 max_boxes: int = MAX_BOXES, mesh: Optional[Mesh] = None
                  ) -> ROIResult:
     """Fleet ROIDet: frames (C, N, H, W) -> camera-batched ROIResult.
 

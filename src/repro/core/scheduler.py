@@ -7,7 +7,7 @@ Per time slot:
   knapsack) -> decode -> server detector -> per-camera F1; slot utility =
   sum_i lambda_i F1_i.
 
-Two execution modes (``SystemConfig.batched``):
+Three execution modes (``SystemConfig.batched`` / ``SystemConfig.episode``):
   * batched (default) — the sharded, sync-free fleet slot-step: ONE compiled
     encode->detect->score->reuse-mix program over the camera axis
     (``core.fleet.fleet_slot_step``) shared by ALL methods (deepstream,
@@ -18,18 +18,27 @@ Two execution modes (``SystemConfig.batched``):
     default ``SystemConfig.alloc="device"`` the control loop itself
     (elastic + utility table + allocation, ``fleet.fleet_control_step``)
     is a traced program consuming the ROIDet (a, c) device vectors and a
-    prefetched bandwidth-trace device array — the host harvests ONLY the
-    previous slot's packed (F1, sizes) + (4,) control logs, so the timed
-    loop is clean under ``jax.transfer_guard_device_to_host("disallow")``.
+    prefetched bandwidth-trace device array, and reducto's keep-flag
+    decision is traced too (``fleet.reducto_keep_step`` + the in-program
+    ``fleet.keep_selection``) — the host harvests ONLY the previous slot's
+    packed (F1, sizes) + (4,) control logs, so the timed loop is clean
+    under ``jax.transfer_guard_device_to_host("disallow")``.
     ``alloc="host"`` keeps the numpy reference control path (one packed
     (a, c) D2H fetch per slot).  With >1 device the camera axis is
     shard_map'd over a ("camera",) mesh and the big per-slot buffers are
     donated (``SystemConfig.shard`` / ``donate``).
+  * episode (``SystemConfig.episode=True``) — the whole-trace runner
+    (``run_episode``): segment generation moves on device
+    (``data.synthetic.DeviceScene`` / ``segments_device``) and the ENTIRE
+    N-slot trace executes as one ``fleet.fleet_episode`` lax.scan per
+    method, under ``jax.transfer_guard("disallow")`` both directions with
+    no scoped exemptions; stacked logs are harvested once at episode end.
   * sequential — the original per-camera Python loop, kept as the
-    equivalence/benchmark baseline.  Both modes consume PRNG keys in the
+    equivalence/benchmark baseline.  All modes consume PRNG keys in the
     same order, so F1/size logs agree within float tolerance — including
     reducto, whose sequential arm encodes fixed-shape segments with a traced
-    kept-frame count so both arms draw identical coding noise.
+    kept-frame count and tracks the same cross-slot reference frame, so
+    every arm draws identical coding noise.
 
 Baselines (section 7.2):
   * reducto  — on-camera frame filtering (low-level feature deltas) + fair
@@ -42,7 +51,6 @@ Baselines (section 7.2):
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -59,35 +67,42 @@ from repro.core import roidet as roidet_mod
 from repro.core import utility as util_mod
 from repro.core.codec import CodecConfig
 from repro.core.elastic import ElasticConfig, ElasticState
-from repro.data.synthetic import MultiCameraScene, SceneConfig
+from repro.data.synthetic import DeviceScene, MultiCameraScene, SceneConfig
 from repro.kernels.edge_motion import ops as em_ops
 from repro.models import detector as det
 from repro.sharding import rules as shard_rules
 
 
 # block-motion mass above which a frame counts as "changed" (reducto keep
-# rule) — shared by the sequential and fleet paths, which must stay bit-in-
-# sync for the batched-vs-sequential <=1e-6 equivalence guarantee
-MOTION_KEEP_THRESH = 25.0
+# rule) — one constant shared by the sequential, pipelined-traced and
+# episode paths (they must stay bit-in-sync for the cross-mode equivalence
+# guarantees); lives in ``fleet`` so traced programs need no import cycle
+MOTION_KEEP_THRESH = fleet_mod.MOTION_KEEP_THRESH
 
 
 # -- device-to-host accounting ------------------------------------------------
 # Every D2H fetch the batched loop performs goes through ``_d2h`` so the
-# "zero per-slot sync" guarantee of the device-resident control loop is
-# CHECKABLE: on TPU/GPU, running the loop under
+# "zero per-slot sync" guarantee of the device-resident paths is CHECKABLE:
+# on TPU/GPU, running the loop under
 # ``jax.transfer_guard_device_to_host("disallow")`` trips on any fetch not
-# scoped ``exempt`` (the log harvest + reducto's camera-side keep decision);
-# on the CPU backend D2H is zero-copy and the guard never fires, so the
-# per-category counters below are the proof instead (tests assert
-# ``control == 0`` in device-alloc mode).
+# scoped ``exempt`` (the pipelined log harvest; episode mode has NO per-slot
+# exemption at all — its one harvest happens after the trace); on the CPU
+# backend D2H is zero-copy and the guard never fires, so the per-category
+# counters below are the proof instead.  Categories: 'harvest' (packed log
+# fetches), 'keep' (reducto keep-flag fetches — sequential mode only since
+# the keep decision moved on device), 'control' (the host control path's
+# (a, c) sync).  Episode runs must leave 'keep' and 'control' at zero and
+# add exactly TWO 'harvest' fetches per run (the stacked F1/size pack and
+# the stacked control pack), independent of slot count.
 
+D2H_CATEGORIES = ("harvest", "keep", "control")
 _D2H_FETCHES: Dict[str, int] = {}
 
 
 def d2h_fetch_counts() -> Dict[str, int]:
-    """Snapshot of the per-category D2H fetch counters ('harvest', 'keep',
-    'control') since process start."""
-    return dict(_D2H_FETCHES)
+    """Snapshot of the per-category D2H fetch counters since process start
+    (every category always present, zero-initialized)."""
+    return {k: _D2H_FETCHES.get(k, 0) for k in D2H_CATEGORIES}
 
 
 def _d2h(x, kind: str, exempt: bool = False) -> np.ndarray:
@@ -98,22 +113,20 @@ def _d2h(x, kind: str, exempt: bool = False) -> np.ndarray:
     return np.asarray(x)
 
 
-def _motion_keep(score_sums: np.ndarray) -> np.ndarray:
-    """(..., N-1) per-pair motion-score sums -> (..., N) keep flags; the
-    first frame of a segment is always kept."""
-    lead = np.ones(score_sums.shape[:-1] + (1,), bool)
-    return np.concatenate([lead, score_sums > MOTION_KEEP_THRESH], axis=-1)
+def _motion_keep(score_sums: np.ndarray, first: bool) -> np.ndarray:
+    """(..., N) per-pair motion-score sums (pair 0 = frame 0 vs the CROSS-
+    SLOT reference, the last kept frame of the previous slot) -> (..., N)
+    keep flags.  Frame 0 is forced kept on the first slot of a run (no
+    reference yet) and on all-quiet slots (every slot transmits >= 1 frame)
+    — the host mirror of ``fleet._reducto_keep_impl``."""
+    keep = score_sums > MOTION_KEEP_THRESH
+    keep[..., 0] |= first | ~keep.any(axis=-1)
+    return keep
 
 
-@functools.partial(jax.jit, static_argnames=("n",))
-def _key_chain(key: jax.Array, n: int) -> Tuple[jax.Array, jax.Array]:
-    """n sequential key splits in ONE dispatch.  Bit-identical to repeatedly
-    calling ``key, k = jax.random.split(key)`` on the host, so the fleet path
-    draws exactly the keys the per-camera loop would."""
-    def step(k, _):
-        k, sub = jax.random.split(k)
-        return k, sub
-    return jax.lax.scan(step, key, None, length=n)
+# the fleet paths and the per-camera host loop share ONE key-split chain so
+# every execution mode draws identical coding-noise samples
+_key_chain = fleet_mod._key_chain
 
 
 @dataclass
@@ -130,10 +143,19 @@ class SystemConfig:
     pipeline: bool = True                     # deferred-harvest slot loop
     donate: bool = True                       # donate per-slot fleet buffers
     alloc: str = "device"                     # control loop: "device" | "host"
+    episode: bool = False                     # whole-trace lax.scan episodes
 
     def __post_init__(self):
         if self.alloc not in ("device", "host"):
             raise ValueError(f"alloc must be 'device' or 'host': {self.alloc!r}")
+        if self.episode:
+            # the episode scan IS the device control loop — there is no
+            # host-alloc variant of a program the host never re-enters
+            if not self.batched:
+                raise ValueError("episode mode requires batched=True")
+            if self.alloc != "device":
+                raise ValueError("episode mode requires alloc='device' "
+                                 f"(got {self.alloc!r})")
         # the sequential reference loop has no traced control path; normalize
         # so the config (and bench metadata stamped from it) states what runs
         if not self.batched:
@@ -156,6 +178,8 @@ class DeepStreamSystem:
         self.tau_wh: float = float("inf")
         self.jcab_table: Optional[np.ndarray] = None   # (J, R) content-agnostic F1
         self._key = jax.random.PRNGKey(1234)
+        self._reducto_ref: Optional[jax.Array] = None       # batched runs
+        self._reducto_ref_host: List[Optional[np.ndarray]] = []  # sequential
         self.timers: Dict[str, List[float]] = {}
         self.mesh = (shard_rules.camera_mesh()
                      if cfg.batched and cfg.shard == "auto" else None)
@@ -239,63 +263,52 @@ class DeepStreamSystem:
     # -- server-side evaluation: batched fleet path ------------------------------
 
     def _slot_dispatch(self, frames, gts, masks, b: np.ndarray, r: np.ndarray,
-                       *, keys=None, n_eff=None, eval_idx=None, eval_w=None,
-                       reuse: Optional[Dict[str, np.ndarray]] = None,
+                       *, keys=None, keep: Optional[jax.Array] = None,
+                       gt_dev: Optional[Tuple[jax.Array, jax.Array]] = None,
                        with_reuse: bool = True) -> fleet_mod.FleetSlotOut:
         """Dispatch the unified fleet slot-step WITHOUT blocking.
 
-        frames (C,N,H,W); gts[cam][frame] GT lists; masks (C,M,Nb) bool or
-        None (no cropping); b, r (C,).  ``reuse`` carries the reducto
-        detection-reuse arm inputs (``fleet.neutral_reuse_inputs`` shape,
-        w_keep=1 turns the arm off for every other method).  ``run()`` keeps
+        frames (C,N,H,W); gts[cam][frame] GT lists (ignored when ``gt_dev``
+        already holds the padded (C,N,G,..) device GT, e.g. from a
+        ``DeviceScene``); masks (C,M,Nb) bool or None (no cropping);
+        b, r (C,).  ``keep`` carries reducto's traced (C, N) keep-flags
+        (None = all frames kept, which routes every other method through the
+        same executable with the reuse arm inert).  ``run()`` keeps
         ``with_reuse=True`` so all methods share ONE executable; the
         profiling sweep (its batch shape is a separate specialization anyway)
         drops the arm's dead work with ``with_reuse=False``.
         """
         C, N = frames.shape[:2]
-        F = self.cfg.eval_frames if eval_idx is None else eval_idx.shape[1]
-        F = min(F, N)
         if masks is None:
             masks = roidet_mod.full_frame_mask(
                 C, frames.shape[2], frames.shape[3], self.cfg.block_size)
         if keys is None:
             keys = self._keys(C)
-        if eval_idx is None:
-            eval_idx = np.repeat(
-                fleet_mod.eval_indices(N, self.cfg.eval_frames)[None], C, 0)
-        if eval_w is None:
-            eval_w = fleet_mod.uniform_eval_weights(C, eval_idx.shape[1])
-        n_eff_arr = (jnp.full((C,), N, jnp.float32) if n_eff is None
-                     else jnp.asarray(n_eff, jnp.float32))
-        if reuse is None:
-            reuse = fleet_mod.neutral_reuse_inputs(C, F, self._G, N)
-        gt_boxes, gt_valid = fleet_mod.pad_gt(gts, eval_idx, G=self._G)
+        if keep is None:
+            keep = jnp.ones((C, N), bool)
+        if gt_dev is None:
+            gt_boxes, gt_valid = fleet_mod.pad_gt_all(gts, N, G=self._G)
+        else:
+            gt_boxes, gt_valid = gt_dev
         t0 = time.perf_counter()
         out = fleet_mod.fleet_slot_step(
             self.cfg.codec, self.server, jnp.asarray(frames),
             jnp.asarray(masks), jnp.asarray(b, jnp.float32),
-            jnp.asarray(r, jnp.float32), keys, n_eff_arr,
-            jnp.asarray(eval_idx, jnp.int32), jnp.asarray(eval_w, jnp.float32),
+            jnp.asarray(r, jnp.float32), keys, keep,
             jnp.asarray(gt_boxes), jnp.asarray(gt_valid),
-            jnp.asarray(reuse["reuse_idx"], jnp.int32),
-            jnp.asarray(reuse["miss_boxes"]), jnp.asarray(reuse["miss_valid"]),
-            jnp.asarray(reuse["miss_w"]), jnp.asarray(reuse["w_keep"]),
-            block_size=self.cfg.block_size, mesh=self.mesh,
-            donate=self.cfg.donate, with_reuse=with_reuse)
+            eval_frames=self.cfg.eval_frames, block_size=self.cfg.block_size,
+            mesh=self.mesh, donate=self.cfg.donate, with_reuse=with_reuse)
         self._t("fleet", t0)
         return out
 
     def fleet_encode_eval(self, frames: np.ndarray, gts: List[List[List[Tuple]]],
                           masks: Optional[jax.Array], b: np.ndarray,
-                          r: np.ndarray, *, keys: Optional[jax.Array] = None,
-                          n_eff: Optional[np.ndarray] = None,
-                          eval_idx: Optional[np.ndarray] = None
+                          r: np.ndarray, *, keys: Optional[jax.Array] = None
                           ) -> Tuple[np.ndarray, np.ndarray, fleet_mod.FleetSlotOut]:
         """Whole-fleet encode->detect->score in one compiled call (blocking
         variant used by profiling and tests; no reuse arm).  Returns
         (per-frame F1s (C, F), sizes (C,), raw FleetSlotOut)."""
         out = self._slot_dispatch(frames, gts, masks, b, r, keys=keys,
-                                  n_eff=n_eff, eval_idx=eval_idx,
                                   with_reuse=False)
         t0 = time.perf_counter()
         jax.block_until_ready(out.host_pack)
@@ -376,7 +389,6 @@ class DeepStreamSystem:
         keyseq = self._keys(C * J * R * 2).reshape(C, J, R, 2, 2)
         ones = np.ones_like(np.asarray(roi.mask))
         masks_cr = np.stack([np.asarray(roi.mask), ones], axis=1)  # (C,2,M,Nb)
-        eval_idx_1 = fleet_mod.eval_indices(N, self.cfg.eval_frames)
         masked_f1 = np.zeros((C, J, R), np.float32)
         full_f1 = np.zeros((C, J, R), np.float32)
         # entry layout per chunk: (camera, resolution, masked/full)
@@ -387,13 +399,12 @@ class DeepStreamSystem:
             masks_cr[:, None, :], R, axis=1).reshape(B, *masks_cr.shape[2:])
         r_b = np.repeat(np.tile(np.asarray(cfgc.resolutions, np.float32),
                                 C)[:, None], 2, 1).reshape(B)
-        eval_idx = np.repeat(eval_idx_1[None], B, 0)
         gts_b = [seg["boxes"][i] for i in range(C) for _ in range(R * 2)]
         for j, b in enumerate(cfgc.bitrates_kbps):
             keys_j = keyseq[:, j].reshape(B, 2)
             f1f, _, _ = self.fleet_encode_eval(
                 frames_b, gts_b, jnp.asarray(masks_b), np.full(B, b),
-                r_b, keys=keys_j, eval_idx=eval_idx)
+                r_b, keys=keys_j)
             f1 = f1f.mean(axis=1).reshape(C, R, 2)
             masked_f1[:, j] = f1[:, :, 0]
             full_f1[:, j] = f1[:, :, 1]
@@ -418,50 +429,22 @@ class DeepStreamSystem:
         return float(np.mean([det.f1_score(boxes, valid, gts_missed[j])
                               for j in sel]))
 
-    def _reducto_fleet_inputs(self, frames: np.ndarray, gts,
-                              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
-                                         Dict[str, np.ndarray]]:
-        """Host-side reducto prep for the unified slot-step: motion filtering
-        (one sharded kernel grid, ONE packed (C, N-1) fetch), kept/missed
-        eval-frame selections and the traced reuse-arm weights.
-        Returns (n_eff, eval_idx, eval_w, reuse_inputs)."""
-        C, N = frames.shape[:2]
-        F = min(self.cfg.eval_frames, N)
-        sc = em_ops.segment_motion_fleet(
-            jnp.asarray(frames), block_size=self.cfg.block_size,
-            use_kernel=self.cfg.use_kernels, mesh=self.mesh)  # (C,N-1,M,Nb)
-        # the camera-side keep decision is host control flow (it shapes the
-        # host-built eval/miss index arrays), so this ONE packed (C, N-1)
-        # fetch stays — a documented transfer-guard exemption, like the log
-        # harvest; the ALLOCATION side of reducto is still device-resident
-        keep = _motion_keep(_d2h(jnp.sum(sc, axis=(2, 3)), "keep",
-                                 exempt=True))
-        n_eff = keep.sum(axis=1).astype(np.float32)
-        eval_idx = np.zeros((C, F), np.int64)
-        m_per_cam = np.zeros(C, np.int64)
-        miss_sel = np.zeros((C, F), np.int64)
-        miss_w = np.zeros((C, F), np.float32)
-        w_keep = np.ones(C, np.float32)
-        reuse_idx = np.zeros(C, np.int32)
-        for i in range(C):
-            kept_idx, ev = self._kept_eval_selection(keep[i])
-            m = len(ev)
-            eval_idx[i, :m] = ev
-            eval_idx[i, m:] = ev[-1]
-            m_per_cam[i] = m
-            reuse_idx[i] = kept_idx[-1]
-            miss_idx = np.flatnonzero(~keep[i])
-            if len(miss_idx):
-                msel = fleet_mod.eval_indices(len(miss_idx),
-                                              self.cfg.eval_frames)
-                miss_sel[i, :len(msel)] = miss_idx[msel]
-                miss_w[i, :len(msel)] = 1.0 / len(msel)
-                w_keep[i] = keep[i].mean()
-        eval_w = fleet_mod.uniform_eval_weights(C, F, m_per_cam)
-        miss_boxes, miss_valid = fleet_mod.pad_gt(gts, miss_sel, G=self._G)
-        reuse = dict(reuse_idx=reuse_idx, miss_boxes=miss_boxes,
-                     miss_valid=miss_valid, miss_w=miss_w, w_keep=w_keep)
-        return n_eff, eval_idx, eval_w, reuse
+    def _reducto_keep(self, frames: jax.Array, t: int
+                      ) -> Tuple[jax.Array, None]:
+        """Traced reducto keep decision for the batched loop: motion ->
+        keep-flags -> next-slot reference, ONE device dispatch with ZERO
+        host fetches (the pre-episode per-slot 'keep' D2H sync is gone —
+        kept/missed frame selection happens inside the slot-step program
+        via ``fleet.keep_selection``).  The cross-slot reference (last kept
+        frame) is threaded through ``self._reducto_ref``."""
+        C, H, W = frames.shape[0], frames.shape[2], frames.shape[3]
+        if self._reducto_ref is None:
+            self._reducto_ref = jnp.zeros((C, H, W), jnp.float32)
+        keep, self._reducto_ref = fleet_mod.reducto_keep_step(
+            frames, self._reducto_ref, t == 0,
+            block_size=self.cfg.block_size, use_kernel=self.cfg.use_kernels,
+            mesh=self.mesh)
+        return keep, None
 
     # -- online loop -------------------------------------------------------------
 
@@ -484,9 +467,78 @@ class DeepStreamSystem:
             ) -> Dict[str, np.ndarray]:
         if use_elastic is None:
             use_elastic = method == "deepstream"
+        if self.cfg.episode:
+            return self.run_episode(scene, trace_kbps, method, use_elastic)
         if self.cfg.batched:
             return self._run_batched(scene, trace_kbps, method, use_elastic)
         return self._run_sequential(scene, trace_kbps, method, use_elastic)
+
+    def run_episode(self, scene: DeviceScene, trace_kbps: np.ndarray,
+                    method: str = "deepstream",
+                    use_elastic: Optional[bool] = None
+                    ) -> Dict[str, np.ndarray]:
+        """Whole-trace device-resident episode: one ``fleet_episode``
+        dispatch covers every slot (segment generation included — ``scene``
+        must be a ``DeviceScene``), then ONE stacked-log harvest.  During
+        the timed region (dispatch + wait) the host performs ZERO per-slot
+        work: no uploads, no fetches, no Python slot loop — callers may wrap
+        it in ``jax.transfer_guard("disallow")`` with no scoped exemptions.
+        Log-equivalent to the pipelined ``run()`` over the same
+        ``DeviceScene`` seeds (<= 1e-5, see tests/test_episode.py)."""
+        if use_elastic is None:
+            use_elastic = method == "deepstream"
+        if not (self.cfg.batched and self.cfg.alloc == "device"):
+            raise ValueError("episode mode requires batched=True and "
+                             "alloc='device'")
+        if not isinstance(scene, DeviceScene):
+            raise TypeError("run_episode needs a DeviceScene (device-side "
+                            f"segment generation), got {type(scene)!r}")
+        assert scene.G == self._G, (scene.G, self._G)
+        C = self.cfg.scene.num_cameras
+        lam = self.cfg.lam()
+        # untimed prep: every operand device-resident before dispatch
+        ctx = self._control_context(method, trace_kbps, use_elastic)
+        deep = method in ("deepstream", "deepstream_no_elastic")
+        t0 = time.perf_counter()
+        # fleet_episode preps/places inputs, then runs the whole trace under
+        # jax.transfer_guard("disallow") in BOTH directions with NO scoped
+        # exemptions and blocks — the structural zero-per-slot-transfer
+        # guarantee of episode mode
+        out = fleet_mod.fleet_episode(
+            method, codec_cfg=self.cfg.codec, scene_cfg=scene.cfg,
+            server_params=self.server, light_params=self.light,
+            mlp_params=self.mlp if deep else None,
+            jcab_util=ctx["jcab_util"], jcab_res=ctx["jcab_res"],
+            lam=ctx["lam"], scene_params=scene.params, trace=ctx["trace"],
+            key0=self._key, skey=scene.key, tau_wl=ctx["tau_wl"],
+            tau_wh=ctx["tau_wh"], est0=ctx["est"], ecfg=self.cfg.elastic,
+            bitrates=tuple(self.cfg.codec.bitrates_kbps),
+            resolutions=tuple(self.cfg.codec.resolutions),
+            use_elastic=use_elastic, w_cap=ctx["w_cap"], num_cams=C,
+            eval_frames=self.cfg.eval_frames, block_size=self.cfg.block_size,
+            use_kernel=self.cfg.use_kernels, gt_pad=self._G,
+            t_start=scene._t, mesh=self.mesh)
+        self._t("episode", t0)
+        # advance the scene cursor exactly like T pipelined segment() calls
+        # would — a reused scene continues, matching the pipelined reference
+        scene._t += len(trace_kbps)
+        self._key = out.key
+        t0 = time.perf_counter()
+        # the ONE whole-trace harvest — deliberately NOT transfer-guard
+        # exempted: it happens after the timed region, so episode runs need
+        # no scoped per-slot exemption anywhere
+        packs = _d2h(out.packs, "harvest")
+        cpacks = _d2h(out.cpacks, "harvest")
+        self._t("harvest", t0)
+        return {
+            "utility": packs[:, 0] @ lam,
+            "mean_f1": packs[:, 0].mean(axis=1),
+            "bytes": packs[:, 1].sum(axis=1),
+            "W": np.asarray(trace_kbps, float),
+            "extra": cpacks[:, 0].astype(float),
+            "area": cpacks[:, 1].astype(float),
+            "alloc_kbps": cpacks[:, 2].astype(float),
+        }
 
     def _slot_allocation(self, method: str, frames: np.ndarray, W_t: float,
                          est: ElasticState, use_elastic: bool
@@ -554,7 +606,12 @@ class DeepStreamSystem:
         W_max = float(np.max(trace_kbps))
         if use_elastic:
             W_max += self.cfg.elastic.budget_kbits / cfgc.slot_seconds
-        W_max = max(W_max, float(bitrates[0]))
+        # the static capacity must also cover the all-minimum infeasibility
+        # clamp (min-bitrate x num-cameras): allocate_dp_jax folds the clamp
+        # into the swept capacity, so a trace-max-only bound would assert on
+        # low-bandwidth traces with fine-grained bitrate grids
+        W_max = max(W_max, float(min(bitrates)) *
+                    self.cfg.scene.num_cameras)
         ctx: Dict[str, Any] = dict(
             trace=jnp.asarray(np.asarray(trace_kbps, np.float32)),
             lam=jnp.asarray(self.cfg.lam(), jnp.float32),
@@ -640,15 +697,20 @@ class DeepStreamSystem:
                 logs["area"].append(float(cp[1]))
                 logs["alloc_kbps"].append(float(cp[2]))
 
+        self._reducto_ref = None
         pending: Optional[Tuple] = None
         for t in range(len(trace_kbps)):
             W_t = float(trace_kbps[t])
             seg = scene.segment()
-            gts = seg["boxes"]
+            # DeviceScene segments carry padded GT device arrays — the lazy
+            # host "boxes" lists (a D2H fetch + Python build) stay untouched
+            gt_dev = seg.get("gt_dev")
+            gts = None if gt_dev is not None else seg["boxes"]
             # ONE H2D upload per slot: ROIDet/motion and the slot-step all
             # consume this device array (their jnp.asarray is then a no-op);
             # they dispatch before the slot-step donates it, and the next
-            # slot uploads a fresh segment
+            # slot uploads a fresh segment.  DeviceScene segments are already
+            # device-resident (incl. padded GT) — zero uploads.
             frames = jnp.asarray(seg["frames"])
             keys = self._keys(C)
             if device_ctrl:
@@ -662,14 +724,12 @@ class DeepStreamSystem:
                 logs["extra"].append(extra)
                 logs["area"].append(area)
                 logs["alloc_kbps"].append(alloc_kbps)
-            n_eff = eval_idx = eval_w = reuse = None
+            keep = None
             if method == "reducto":
-                n_eff, eval_idx, eval_w, reuse = \
-                    self._reducto_fleet_inputs(frames, gts)
+                keep, _ = self._reducto_keep(frames, t)
 
             out = self._slot_dispatch(frames, gts, masks, b, r, keys=keys,
-                                      n_eff=n_eff, eval_idx=eval_idx,
-                                      eval_w=eval_w, reuse=reuse)
+                                      keep=keep, gt_dev=gt_dev)
             logs["W"].append(W_t)
             if pending is not None:
                 harvest(pending)
@@ -690,6 +750,7 @@ class DeepStreamSystem:
         logs = {k: [] for k in ("utility", "mean_f1", "bytes", "W", "extra",
                                 "alloc_kbps", "area")}
 
+        self._reducto_ref_host: List[Optional[np.ndarray]] = [None] * C
         for t in range(len(trace_kbps)):
             W_t = float(trace_kbps[t])
             seg = scene.segment()
@@ -697,7 +758,7 @@ class DeepStreamSystem:
             b, r, masks, extra, area, alloc_kbps, est = self._slot_allocation(
                 method, frames, W_t, est, use_elastic)
             if method == "reducto":
-                f1s, sizes = self._reducto_slot(frames, gts, b)
+                f1s, sizes = self._reducto_slot(frames, gts, b, first=t == 0)
             else:
                 f1s, sizes = self._encode_eval_all(frames, gts, masks, b, r)
             logs["extra"].append(extra)
@@ -728,26 +789,33 @@ class DeepStreamSystem:
         return f1s, sizes
 
     def _reducto_slot(self, frames: np.ndarray, gts: List[List[List[Tuple]]],
-                      bs: np.ndarray) -> Tuple[List[float], List[float]]:
+                      bs: np.ndarray, first: bool
+                      ) -> Tuple[List[float], List[float]]:
         """Sequential reducto baseline slot: edge-diff frame filtering + fair
         shares, one camera at a time.
 
         Encodes the FIXED-SHAPE segment with a traced kept-frame count
         (``num_frames``) and scores the kept frames through eval indices —
-        exactly the math the unified fleet program runs — so the batched path
-        reproduces this reference to float tolerance (both draw the same
-        coding-noise samples on the same-shaped arrays).
+        exactly the math the unified fleet program runs (including the
+        cross-slot reference: frame 0 scores against the previous slot's
+        last KEPT frame, threaded through ``self._reducto_ref_host``) — so
+        the batched path reproduces this reference to float tolerance (both
+        draw the same coding-noise samples on the same-shaped arrays).
         """
         C, N = frames.shape[:2]
         f1s, sizes = [], []
         H, W = frames.shape[-2:]
         for i in range(C):
             fr = frames[i]
+            ref = fr[0] if first else self._reducto_ref_host[i]
             sc = em_ops.segment_motion(
-                jnp.asarray(fr), block_size=self.cfg.block_size,
-                use_kernel=self.cfg.use_kernels)
-            keep = _motion_keep(np.asarray(sc.sum((1, 2))))
+                jnp.concatenate([jnp.asarray(ref)[None], jnp.asarray(fr)]),
+                block_size=self.cfg.block_size,
+                use_kernel=self.cfg.use_kernels)             # (N, M, Nb)
+            keep = _motion_keep(_d2h(jnp.sum(sc, axis=(1, 2)), "keep",
+                                     exempt=True), first)
             kept_idx, ev_idx = self._kept_eval_selection(keep)
+            self._reducto_ref_host[i] = fr[kept_idx[-1]]
             t0 = time.perf_counter()
             decoded, size = codec_mod.encode_segment(
                 self.cfg.codec, jnp.asarray(fr), jnp.float32(H * W),

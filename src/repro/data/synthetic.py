@@ -22,10 +22,14 @@ deterministic given the seed.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 
 @dataclass(frozen=True)
@@ -174,6 +178,288 @@ class MultiCameraScene:
             boxes.append(cam_boxes)
         return {"frames": frames, "boxes": boxes,
                 "t": self._frame_idx // n - 1}
+
+
+# ---------------------------------------------------------------------------
+# Device-resident scene: traced, seeded slot synthesis (episode mode)
+# ---------------------------------------------------------------------------
+#
+# The host ``MultiCameraScene`` is a stateful numpy world simulator — every
+# slot is built on the host and uploaded, which is the dominant H2D term of
+# the pipelined loop.  ``segments_device`` is its device-side counterpart: a
+# PURE traced function (slot t's frames + padded GT are a closed-form
+# function of (params, base key, t)), so a whole bandwidth trace can be
+# ``lax.scan``-ed with zero mid-run uploads.  Statelessness is what makes the
+# scan possible: instead of stepping a world, each of K pool objects follows
+# a periodic trajectory (enter -> cross -> leave -> respawn after a quiet
+# window), which preserves the properties the paper's mechanisms exploit —
+# fluctuating ROI area, cross-camera correlation (world objects shared by
+# every camera up to per-camera view offsets and time lags), stationary
+# objects motion cannot find, and per-frame GT for F1.
+#
+# PRNG fold-in scheme (reproducibility contract): all slot randomness is
+# coding noise drawn from ``fold_in(fold_in(base_key, t), camera_id)`` — the
+# per-slot fold makes slots independent of evaluation ORDER (episode scan,
+# pipelined loop and the host ``DeviceScene.segment()`` adapter generate
+# bit-identical content for the same (seed, t)), and the per-camera fold
+# keeps noise distinct across cameras even when the camera axis is sharded
+# over a mesh (every device folds the SAME slot key with DIFFERENT global
+# camera ids).  Geometry (backgrounds, object pool, offsets) is drawn once at
+# init time from ``numpy.default_rng(cfg.seed)`` exactly like the host scene.
+
+class DeviceSceneParams(NamedTuple):
+    """Per-scene device buffers consumed by ``segments_device``.  Camera-
+    leading fields shard over a ("camera",) mesh; the object pool is world
+    state shared by every camera (replicated)."""
+    backgrounds: jax.Array   # (C, H, W) float32 — stationary objects baked in
+    stat_boxes: jax.Array    # (C, S, 4) float32 xyxy GT of stationary objects
+    stat_valid: jax.Array    # (C, S) bool (False rows = inert mesh padding)
+    offsets: jax.Array       # (C, 2) float32 per-camera view offset (ox, oy)
+    lags: jax.Array          # (C,) int32 per-camera time lag (frames)
+    cam_ids: jax.Array       # (C,) int32 GLOBAL camera index (noise fold-in)
+    objects: jax.Array       # (K, 10) float32 pool: [side, speed, y0, vy,
+                             #   w, h, val, phase, period, ttl]
+
+    @staticmethod
+    def pspecs() -> "DeviceSceneParams":
+        cam = P("camera")
+        return DeviceSceneParams(cam, cam, cam, cam, cam, cam, P())
+
+
+def init_device_scene(cfg: SceneConfig) -> DeviceSceneParams:
+    """Draw the scene geometry ONCE (host, numpy, same seed discipline as
+    ``MultiCameraScene``) and place it as device buffers."""
+    rng = np.random.default_rng(cfg.seed)
+    C, H, W = cfg.num_cameras, cfg.height, cfg.width
+    backgrounds = np.zeros((C, H, W), np.float32)
+    for i in range(C):
+        base = rng.uniform(0.25, 0.55, (H // 8, W // 8))
+        backgrounds[i] = np.kron(base, np.ones((8, 8)))[:H, :W]
+    offsets = rng.uniform(-cfg.view_jitter, cfg.view_jitter, (C, 2))
+    lags = rng.integers(0, cfg.cam_lag_frames + 1, C)
+    S = cfg.num_stationary
+    stat_boxes = np.zeros((C, S, 4), np.float32)
+    for i in range(C):
+        for s in range(S):
+            w = int(rng.integers(*cfg.obj_size_range))
+            h = int(rng.integers(*cfg.obj_size_range))
+            x = int(rng.integers(0, W - w))
+            y = int(rng.integers(0, H - h))
+            v = float(rng.uniform(0.7, 0.95))
+            backgrounds[i, y:y + h, x:x + w] = v
+            stat_boxes[i, s] = (x, y, x + w, y + h)
+    # periodic object pool: enter off-screen, cross at ~mean_speed px/frame,
+    # stay active ttl frames of each period — concurrent visible count
+    # fluctuates like the host scene's spawn waves
+    K = cfg.max_objects
+    period = rng.integers(140, 320, K).astype(np.float32)
+    objects = np.stack([
+        rng.integers(0, 2, K).astype(np.float32),              # side
+        np.maximum(0.5, rng.normal(cfg.mean_speed, 1.0, K)),   # speed
+        rng.uniform(0.15, 0.85, K) * H,                        # y0
+        rng.normal(0, 0.2, K),                                 # vy
+        rng.integers(*cfg.obj_size_range, K).astype(np.float32),
+        rng.integers(*cfg.obj_size_range, K).astype(np.float32),
+        rng.uniform(0.6, 1.0, K),                              # val
+        rng.uniform(0, period),                                # phase
+        period,
+        np.minimum(rng.integers(60, 240, K), period - 30),     # ttl
+    ], axis=1).astype(np.float32)
+    return DeviceSceneParams(
+        backgrounds=jnp.asarray(backgrounds),
+        stat_boxes=jnp.asarray(stat_boxes),
+        stat_valid=jnp.ones((C, S), bool),
+        offsets=jnp.asarray(offsets, jnp.float32),
+        lags=jnp.asarray(lags, jnp.int32),
+        cam_ids=jnp.arange(C, dtype=jnp.int32),
+        objects=jnp.asarray(objects))
+
+
+def pad_scene_params(params: DeviceSceneParams, c_pad: int
+                     ) -> DeviceSceneParams:
+    """Pad the camera axis to the mesh size with inert cameras (zero
+    background, invalid stationary GT, fresh global cam ids)."""
+    C = params.backgrounds.shape[0]
+    if c_pad == C:
+        return params
+
+    def pad(x, fill=0):
+        extra = jnp.full((c_pad - C,) + x.shape[1:], fill, x.dtype)
+        return jnp.concatenate([x, extra], axis=0)
+
+    return DeviceSceneParams(
+        backgrounds=pad(params.backgrounds),
+        stat_boxes=pad(params.stat_boxes),
+        stat_valid=pad(params.stat_valid, fill=False),
+        offsets=pad(params.offsets),
+        lags=pad(params.lags),
+        cam_ids=jnp.arange(c_pad, dtype=jnp.int32),
+        objects=params.objects)
+
+
+def segments_device(cfg: SceneConfig, params: DeviceSceneParams,
+                    key: jax.Array, t: jax.Array, *, gt_pad: int
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Traced slot synthesis: (params, base key, slot t) ->
+    (frames (C, N, H, W), gt_boxes (C, N, G, 4), gt_valid (C, N, G)).
+
+    Pure in (key, t): calling it inside a ``lax.scan`` body, per slot from
+    the pipelined loop, or from the host adapter yields bit-identical
+    content.  ``gt_pad`` is the fixed GT box capacity G (the fleet's
+    jit-signature contract, see ``fleet.gt_capacity``); entries are
+    [stationary..., object pool...] with gaps where a pool object is
+    off-screen — the traced F1 is mask-driven, so gapped and compacted GT
+    score identically.  C comes from ``params`` (a mesh shard may hold fewer
+    cameras than ``cfg.num_cameras``)."""
+    C = params.backgrounds.shape[0]
+    N, H, W = cfg.frames_per_segment, cfg.height, cfg.width
+    K, S = params.objects.shape[0], params.stat_boxes.shape[1]
+    assert gt_pad >= S + K, (gt_pad, S, K)
+    t = jnp.asarray(t, jnp.int32)
+
+    # per-(camera, frame) world time, host-lag semantics (clamped at 0)
+    f = jnp.arange(N, dtype=jnp.int32)
+    g = jnp.maximum(t * N + f[None, :] - params.lags[:, None], 0)  # (C, N)
+    gf = g.astype(jnp.float32)[None]                               # (1, C, N)
+
+    o = params.objects
+    side, speed, y0, vy, w_o, h_o, val, phase, period, ttl = (
+        o[:, i, None, None] for i in range(10))                    # (K, 1, 1)
+    u = jnp.mod(gf + phase, period)                                # (K, C, N)
+    active = u < ttl
+    x = jnp.where(side > 0.5, (W + 20.0) - speed * u, -20.0 + speed * u)
+    y = y0 + vy * u
+    ox = params.offsets[None, :, 0, None]
+    oy = params.offsets[None, :, 1, None]
+    x0 = jnp.round(x + ox)
+    y0_ = jnp.round(y + oy)
+    cx0 = jnp.clip(x0, 0, W)
+    cy0 = jnp.clip(y0_, 0, H)
+    cx1 = jnp.clip(x0 + w_o, 0, W)
+    cy1 = jnp.clip(y0_ + h_o, 0, H)
+    ok = active & (cx1 - cx0 >= 3) & (cy1 - cy0 >= 3)              # (K, C, N)
+
+    frames = jnp.broadcast_to(params.backgrounds[:, None],
+                              (C, N, H, W)).reshape(C * N, H, W)
+    # paint each object through an object-sized window instead of a full-
+    # frame mask: a (PW, PW) dynamic slice is read, masked (rectangle body
+    # + the darker "windshield" stripe) and written back per (camera,
+    # frame) — ~100x less arithmetic than (C, N, H, W) masks per object.
+    # The window start is clamped inside the frame and the mask compares
+    # ABSOLUTE pixel coordinates, so border-clipped objects paint exactly
+    # their visible [cx0, cx1) x [cy0, cy1) region.
+    PW = -(-(int(cfg.obj_size_range[1]) + 1) // 8) * 8
+    win = jnp.arange(PW, dtype=jnp.float32)
+
+    def paint(k, fr):
+        x0k = jnp.clip(cx0[k], 0, W - PW).reshape(-1)     # (C*N,) window org
+        y0k = jnp.clip(cy0[k], 0, H - PW).reshape(-1)
+        ys0 = (cy0[k] + jnp.floor((cy1[k] - cy0[k]) / 3.0)).reshape(-1)
+        ys1 = (cy0[k] + jnp.floor((cy1[k] - cy0[k]) / 2.0)).reshape(-1)
+
+        def one(fr_i, x0i, y0i, ys0i, ys1i, cx0i, cx1i, cy0i, cy1i, ok_i):
+            patch = jax.lax.dynamic_slice(
+                fr_i, (y0i.astype(jnp.int32), x0i.astype(jnp.int32)),
+                (PW, PW))
+            pr = (y0i + win)[:, None]                     # absolute rows
+            pc = (x0i + win)[None, :]                     # absolute cols
+            in_c = (pc >= cx0i) & (pc < cx1i) & ok_i
+            body = in_c & (pr >= cy0i) & (pr < cy1i)
+            stripe = in_c & (pr >= ys0i) & (pr < ys1i)
+            patch = jnp.where(body, val[k, 0, 0], patch)
+            patch = jnp.where(stripe, val[k, 0, 0] * 0.6, patch)
+            return jax.lax.dynamic_update_slice(
+                fr_i, patch, (y0i.astype(jnp.int32), x0i.astype(jnp.int32)))
+
+        return jax.vmap(one)(fr, x0k, y0k, ys0, ys1, cx0[k].reshape(-1),
+                             cx1[k].reshape(-1), cy0[k].reshape(-1),
+                             cy1[k].reshape(-1), ok[k].reshape(-1))
+
+    frames = jax.lax.fori_loop(0, K, paint, frames).reshape(C, N, H, W)
+    kt = jax.random.fold_in(key, t)
+    noise = jax.vmap(lambda cid: jax.random.normal(
+        jax.random.fold_in(kt, cid), (N, H, W), jnp.float32))(params.cam_ids)
+    frames = jnp.clip(frames + cfg.noise_std * noise, 0.0, 1.0)
+
+    mov_boxes = jnp.stack([cx0, cy0, cx1, cy1], axis=-1)       # (K, C, N, 4)
+    mov_boxes = jnp.transpose(mov_boxes, (1, 2, 0, 3))         # (C, N, K, 4)
+    mov_valid = jnp.transpose(ok, (1, 2, 0))                   # (C, N, K)
+    gt_boxes = jnp.concatenate(
+        [jnp.broadcast_to(params.stat_boxes[:, None], (C, N, S, 4)),
+         mov_boxes], axis=2)
+    gt_valid = jnp.concatenate(
+        [jnp.broadcast_to(params.stat_valid[:, None], (C, N, S)),
+         mov_valid], axis=2)
+    gt_boxes = jnp.where(gt_valid[..., None], gt_boxes, 0.0)
+    if gt_pad > S + K:
+        gt_boxes = jnp.pad(gt_boxes,
+                           ((0, 0), (0, 0), (0, gt_pad - S - K), (0, 0)))
+        gt_valid = jnp.pad(gt_valid, ((0, 0), (0, 0), (0, gt_pad - S - K)))
+    return frames, gt_boxes.astype(jnp.float32), gt_valid
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "gt_pad"))
+def _segments_device_jit(cfg, params, key, t, gt_pad):
+    return segments_device(cfg, params, key, t, gt_pad=gt_pad)
+
+
+class _LazySegment(dict):
+    """Segment dict whose expensive host views materialize on first access
+    — the batched loop reads only the device entries (``frames``/
+    ``gt_dev``), so it never pays the D2H fetch + Python GT-list build the
+    sequential reference needs."""
+
+    def __init__(self, base: Dict, lazy: Dict):
+        super().__init__(base)
+        self._lazy = lazy
+
+    def __getitem__(self, k):
+        if not super().__contains__(k) and k in self._lazy:
+            self[k] = self._lazy.pop(k)()
+        return super().__getitem__(k)
+
+    def __contains__(self, k):
+        return super().__contains__(k) or k in self._lazy
+
+    def get(self, k, default=None):
+        return self[k] if k in self else default
+
+
+class DeviceScene:
+    """Host-facing adapter over the traced generator.
+
+    ``segment()`` yields the same dict shape ``MultiCameraScene`` does —
+    except ``frames`` stays a DEVICE array (``jnp.asarray`` in the batched
+    loop is then a no-op: zero uploads) and the host ``boxes`` lists are
+    built lazily (the fleet consumes the padded ``gt_dev`` device arrays
+    directly).  Content is BIT-IDENTICAL to what ``fleet.fleet_episode``
+    synthesizes on device for the same (seed, slot index) — the pipelined
+    ``run()`` over a ``DeviceScene`` is therefore the episode runner's
+    equivalence reference."""
+
+    def __init__(self, cfg: SceneConfig, gt_pad: Optional[int] = None):
+        self.cfg = cfg
+        self.params = init_device_scene(cfg)
+        self.key = jax.random.PRNGKey(cfg.seed)
+        K = self.params.objects.shape[0]
+        S = self.params.stat_boxes.shape[1]
+        self.G = max(gt_pad or 0, -(-(S + K) // 8) * 8, 16)
+        self._t = 0
+
+    def segment(self) -> Dict:
+        t = self._t
+        self._t += 1
+        frames, gtb, gtv = _segments_device_jit(self.cfg, self.params,
+                                                self.key, t, self.G)
+
+        def boxes():
+            gtb_h, gtv_h = np.asarray(gtb), np.asarray(gtv)
+            return [[[tuple(b) for b, v in zip(gtb_h[c, f], gtv_h[c, f])
+                      if v] for f in range(frames.shape[1])]
+                    for c in range(frames.shape[0])]
+
+        return _LazySegment({"frames": frames, "t": t,
+                             "gt_dev": (gtb, gtv)}, {"boxes": boxes})
 
 
 def bandwidth_trace(kind: str, num_slots: int, seed: int = 0) -> np.ndarray:

@@ -16,12 +16,27 @@ from repro.sharding.rules import cached_sharded_jit, pad_cameras, pad_leading
 INTERPRET = pallas_interpret_default()
 
 
+def _resolve_tile_rows(tile_rows: Optional[int], H: int) -> int:
+    """Default row-band height: 32 compiled (VMEM-bounded), FULL frame in
+    interpret mode.  Interpret-mode pallas unrolls one kernel body per grid
+    program at trace time, so a (P, T) grid costs P*T interpreter passes —
+    collapsing the tile axis (T=1) cuts them H/32-fold per frame pair with
+    bit-identical output (tiling is halo-exact by construction), which is
+    what bounds the fleet motion path on one device."""
+    if tile_rows is None:
+        tile_rows = H if INTERPRET else 32
+    return min(tile_rows, H)
+
+
 def _make_tiles(frames: jax.Array, tile_rows: int) -> jax.Array:
     """frames (N, H, W) -> (N, T, TH+2, W+2) edge-padded overlapping bands."""
     N, H, W = frames.shape
     assert H % tile_rows == 0, (H, tile_rows)
     x = jnp.pad(frames, ((0, 0), (1, 1), (1, 1)), mode="edge")  # (N, H+2, W+2)
     T = H // tile_rows
+    if T == 1:
+        # full-height band: the halo IS the padding — skip the row gather
+        return x[:, None]
     # strided gather: band t covers padded rows [t*TH, t*TH + TH + 2)
     rows = (jnp.arange(T) * tile_rows)[:, None] + jnp.arange(tile_rows + 2)[None, :]
     return x[:, rows, :]                                        # (N, T, TH+2, W+2)
@@ -29,11 +44,12 @@ def _make_tiles(frames: jax.Array, tile_rows: int) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("block_size", "tile_rows", "use_kernel", "edge_thresh"))
 def segment_motion(frames: jax.Array, *, block_size: int = 8,
-                   edge_thresh: float = 0.35, tile_rows: int = 32,
+                   edge_thresh: float = 0.35,
+                   tile_rows: Optional[int] = None,
                    use_kernel: bool = True) -> jax.Array:
     """frames (N, H, W) float32 -> (N-1, H/bs, W/bs) block motion scores."""
     N, H, W = frames.shape
-    tile_rows = min(tile_rows, H)
+    tile_rows = _resolve_tile_rows(tile_rows, H)
     if not use_kernel:
         return ref.segment_motion_ref(frames, block_size=block_size,
                                       edge_thresh=edge_thresh)
@@ -45,10 +61,10 @@ def segment_motion(frames: jax.Array, *, block_size: int = 8,
 
 
 def _segment_motion_fleet_impl(frames: jax.Array, *, block_size: int,
-                               edge_thresh: float, tile_rows: int,
+                               edge_thresh: float, tile_rows: Optional[int],
                                use_kernel: bool) -> jax.Array:
     C, N, H, W = frames.shape
-    tile_rows = min(tile_rows, H)
+    tile_rows = _resolve_tile_rows(tile_rows, H)
     if not use_kernel:
         return jax.vmap(lambda f: ref.segment_motion_ref(
             f, block_size=block_size, edge_thresh=edge_thresh))(frames)
@@ -64,7 +80,8 @@ def _segment_motion_fleet_impl(frames: jax.Array, *, block_size: int,
 
 
 def segment_motion_fleet(frames: jax.Array, *, block_size: int = 8,
-                         edge_thresh: float = 0.35, tile_rows: int = 32,
+                         edge_thresh: float = 0.35,
+                         tile_rows: Optional[int] = None,
                          use_kernel: bool = True,
                          mesh: Optional[Mesh] = None) -> jax.Array:
     """Camera-batched variant: frames (C, N, H, W) -> (C, N-1, H/bs, W/bs).

@@ -68,11 +68,26 @@ def backtrack_jax(choices: jax.Array, costs: jax.Array, values: jax.Array,
     independent of the capacity bound).  The picks match
     ``backtrack(choices[:, :Wg+1], costs, values[:Wg+1])`` exactly; the
     second return value is the achieved TOTAL (``ops.solve``'s second
-    element), not the argmax index the host ``backtrack`` returns."""
+    element), not the argmax index the host ``backtrack`` returns.
+
+    The reverse walk is UNROLLED for small camera counts (it is a handful
+    of gathers per camera) instead of a ``fori_loop``: besides shaving loop
+    overhead, a fori_loop here trips a fatal XLA sharding-propagation bug
+    (TileAssignment reshape CHECK) when the backtrack sits inside a
+    shard_map'd ``lax.scan`` body — the episode runner's control stage —
+    on jax 0.4.x; the unrolled form compiles everywhere."""
     I = choices.shape[0]
     w_idx = jnp.arange(values.shape[0])
     masked = jnp.where(w_idx <= Wg, values, NEG)
-    w0 = jnp.argmax(masked).astype(jnp.int32)
+    total = jnp.max(masked)
+    w = jnp.argmax(masked).astype(jnp.int32)
+    if I <= 64:
+        picks = []
+        for i in range(I - 1, -1, -1):
+            j = choices[i, w]
+            picks.append(j)
+            w = jnp.maximum(w - costs[j], 0)
+        return jnp.stack(picks[::-1]), total
 
     def body(k, carry):
         w, picks = carry
@@ -83,8 +98,8 @@ def backtrack_jax(choices: jax.Array, costs: jax.Array, values: jax.Array,
         return w, picks
 
     _, picks = jax.lax.fori_loop(0, I, body,
-                                 (w0, jnp.zeros((I,), jnp.int32)))
-    return picks, jnp.max(masked)
+                                 (w, jnp.zeros((I,), jnp.int32)))
+    return picks, total
 
 
 def exhaustive_oracle(util: np.ndarray, costs: np.ndarray, W: int
