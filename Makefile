@@ -14,9 +14,14 @@
 # harness; the fetch counters must show zero 'keep'/'control' and exactly
 # TWO harvest fetches per run (the stacked F1/size pack + the stacked
 # control pack, slot-count independent).
+# `ci-scenarios` replays the scenario matrix (cross-mode differential
+# harness, trace-length bucketing, golden logs) on the 8-device mesh in the
+# harness's quick mode (reduced family set).
+# Lane pytest selections live ONCE, in tests/harness.py (LANES) — the lanes
+# shell out to it instead of duplicating test lists here.
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-quick ci ci-sharded ci-guard ci-episode
+.PHONY: test bench-quick ci ci-sharded ci-guard ci-episode ci-scenarios
 
 test:
 	$(PY) -m pytest -q
@@ -32,7 +37,10 @@ ci-guard:
 	REPRO_FAKE_DEVICES=8 $(PY) -m pytest -q tests/test_control_device.py
 
 ci-episode:
-	REPRO_FAKE_DEVICES=8 $(PY) -m pytest -q tests/test_episode.py \
-		tests/test_sharded.py::test_episode_sharded_matches_pipelined
+	REPRO_FAKE_DEVICES=8 $(PY) tests/harness.py --lane episode
 
-ci: test bench-quick ci-sharded ci-guard ci-episode
+ci-scenarios:
+	REPRO_FAKE_DEVICES=8 REPRO_SCENARIO_QUICK=1 $(PY) tests/harness.py \
+		--lane scenarios
+
+ci: test bench-quick ci-sharded ci-guard ci-episode ci-scenarios

@@ -62,6 +62,39 @@ def dp_capacity(bitrates: Sequence[int], W_max_kbps: float) -> int:
     return dp_ops.bucket_capacity(int(float(W_max_kbps) // d))
 
 
+def trace_capacity(bitrates: Sequence[int], trace_kbps, num_cams: int, *,
+                   elastic_borrow_kbps: float = 0.0,
+                   pin_kbps: Optional[float] = None) -> int:
+    """``dp_capacity`` for a whole bandwidth trace: the ONE static grid
+    capacity a run's traced allocator sweeps at.
+
+    Covers every slot of the ACTIVE trace (its max, plus the maximum
+    elastic borrow) and the all-minimum infeasibility clamp
+    (min-bitrate x num-cameras, which ``allocate_dp_jax`` folds into the
+    swept capacity).  Callers must compute this from the UNPADDED trace —
+    episode trace-length bucketing appends zero-Kbps slots, and deriving
+    the capacity before padding is what guarantees a bucketed run solves
+    the exact DP the unbucketed program would (picks can never change).
+
+    ``pin_kbps`` pins the capacity to a fixed bandwidth ceiling so DIFFERENT
+    traces (lengths, seeds, scenario families) share one compiled control
+    program — w_cap is a jit static, so a per-trace max would re-trace the
+    episode executable per trace.  The pin must cover the trace: an
+    undersized pin would silently clip slot bandwidths, so it asserts."""
+    W_max = float(np.max(np.asarray(trace_kbps))) + float(elastic_borrow_kbps)
+    W_max = max(W_max, float(min(int(b) for b in bitrates)) * int(num_cams))
+    if pin_kbps is not None:
+        if W_max > float(pin_kbps):
+            # a ValueError, not an assert: an undersized pin would silently
+            # clip slot bandwidths, and asserts vanish under python -O
+            raise ValueError(
+                f"w_cap pin {pin_kbps} Kbps does not cover this trace "
+                f"(needs >= {W_max} Kbps incl. elastic borrow + clamp); "
+                "raise the pin or drop it")
+        W_max = float(pin_kbps)
+    return dp_capacity(bitrates, W_max)
+
+
 def build_utility_table(mlp_params, a: np.ndarray, c: np.ndarray,
                         bitrates: Sequence[int], resolutions: Sequence[float],
                         weights: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:

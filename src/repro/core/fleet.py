@@ -86,6 +86,15 @@ pipelined ``run()`` is kept as the ``episode=False`` reference; over the
 same ``DeviceScene`` seeds both modes produce identical logs (the
 equivalence tests assert <= 1e-5; measured diff 0.0).
 
+Trace lengths are BUCKETED: T is part of the scan's shape, so
+``fleet_episode`` pads every trace up to a power-of-two bucket
+(``EPISODE_BUCKETS``) and one executable per (method, bucket) serves any
+T — a mixed-length suite stops re-tracing the fleet per trace length.
+``bucket_len`` documents the padded-slot contract (a masked tail slot runs
+the per-slot program on dead inputs but cannot advance the key chain, the
+elastic state, the logs, or the DP capacity, which derives from the active
+prefix via ``allocation.trace_capacity``).
+
 Mesh & donation
 ---------------
 The camera axis is the leading axis of every per-camera operand, and the
@@ -131,6 +140,47 @@ from repro.sharding.rules import (cached_sharded_jit, mesh_cache_key,
 # rule) — shared by the sequential, pipelined-traced and episode paths,
 # which must stay bit-in-sync for the cross-mode equivalence guarantees
 MOTION_KEEP_THRESH = 25.0
+
+# default trace-length buckets for the episode runner: T is part of the
+# episode scan's shape, so every distinct trace length used to re-trace the
+# whole fleet program.  ``fleet_episode`` pads T up to the smallest bucket
+# (doubling past the largest) and masks the padding — one executable per
+# (method, bucket) serves every T.  See ``bucket_len`` for the padded-slot
+# semantics contract.
+EPISODE_BUCKETS: Tuple[int, ...] = (8, 16, 32)
+
+
+def bucket_len(T: int, buckets: Optional[Sequence[int]] = EPISODE_BUCKETS
+               ) -> int:
+    """Padded trace length for a T-slot episode: the smallest bucket >= T,
+    doubling the largest bucket until it covers T, or T itself when
+    bucketing is disabled (``buckets`` falsy).
+
+    Padded-slot contract (what a masked slot is and is not allowed to do):
+    a padded slot RUNS the full per-slot program — segment synthesis,
+    ROIDet, control, slot-step — on slot indices past the active prefix
+    (pure wasted flops, bounded by the bucket granularity), but it cannot
+    advance any OBSERVABLE episode state: the returned codec PRNG key and
+    elastic state are read from the last *active* slot's stacked carry, its
+    log rows are sliced off before the harvest, and the reducto reference
+    it perturbs is dead state (padding sits at the END of the scan, after
+    every active slot, and the cross-slot reference resets per run).  The
+    DP capacity is likewise computed from the active prefix of the trace
+    (``allocation.trace_capacity`` runs before padding), so bucketing can
+    never change a pick."""
+    T = int(T)
+    if not buckets:
+        return T
+    bs = sorted(int(b) for b in buckets)
+    if bs[0] < 1:
+        raise ValueError(f"episode buckets must be >= 1: {buckets!r}")
+    for b in bs:
+        if T <= b:
+            return b
+    b = bs[-1]
+    while b < T:
+        b *= 2
+    return b
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
@@ -598,7 +648,7 @@ def episode_compile_count() -> int:
 
 def _episode_impl(server_params, light_params, mlp_params, jcab_util,
                   jcab_res, lam, scene_params: DeviceSceneParams,
-                  trace, t_idx, t_first, key0, skey, tau_wl, tau_wh,
+                  trace, t_idx, t_first, t_len, key0, skey, tau_wl, tau_wh,
                   est0: ElasticStateJax, ref0, *, method: str,
                   scfg: SceneConfig, ccfg: CodecConfig, ecfg: ElasticConfig,
                   bitrates: Tuple[int, ...], resolutions: Tuple[float, ...],
@@ -612,6 +662,15 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
     codec PRNG key + ``ElasticStateJax`` + reducto's cross-slot reference
     frames.  Logs are STACKED on device and harvested once by the caller —
     nothing inside the scan ever touches the host.
+
+    Bucketed traces: the scanned (T_b,) operands may be PADDED past the
+    active prefix (``t_len`` slots) up to a trace-length bucket.  Padded
+    slots run the full per-slot program on dead inputs, but the returned
+    codec key and elastic state are gathered from the stacked carry at slot
+    ``t_len - 1`` — the padding can never advance the key chain or the
+    controller, and the caller slices the stacked logs back to ``t_len``.
+    (The reducto reference a padded slot writes is dead too: padding sits
+    after every active slot and the reference resets per run.)
 
     Sharding: everything per-camera runs on the local camera shard; the
     control step is the one cross-camera stage, so its (a, c) features are
@@ -679,10 +738,16 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
                          keys_l, keep, gtb, gtv, eval_frames=eval_frames,
                          block_size=block_size, conf_thresh=conf_thresh,
                          with_reuse=True)
-        return (key, co.est, ref), (out.host_pack, co.pack)
+        # the post-slot (key, est) carry is ALSO stacked so a bucketed trace
+        # can hand back the last ACTIVE slot's state instead of the carry a
+        # padded tail would have advanced
+        return (key, co.est, ref), (out.host_pack, co.pack, key, co.est)
 
-    (key, est, ref), (packs, cpacks) = jax.lax.scan(
+    _, (packs, cpacks, keys_st, est_st) = jax.lax.scan(
         step, (key0, est0, ref0), (t_idx, trace))
+    last = jnp.maximum(jnp.asarray(t_len, jnp.int32) - 1, 0)
+    key = keys_st[last]
+    est = jax.tree.map(lambda x: x[last], est_st)
     return EpisodeOut(packs=packs, cpacks=cpacks, key=key, est=est)
 
 
@@ -702,7 +767,7 @@ def _get_episode_executable(mesh: Optional[Mesh], **statics):
     # pytree prefix, so it covers whole param trees); scene params carry
     # their own per-field specs; carries/trace replicated; ref0 sharded
     in_specs = (P(), P(), P(), P(), P(), P(), DeviceSceneParams.pspecs(),
-                P(), P(), P(), P(), P(), P(), P(), P(), cam)
+                P(), P(), P(), P(), P(), P(), P(), P(), P(), cam)
     out_specs = EpisodeOut(P(None, None, "camera"), P(), P(), P())
     fn = _EXEC_CACHE[key] = sharded_jit(counted, mesh, in_specs, out_specs)
     return fn
@@ -718,17 +783,30 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
                   use_elastic: bool, w_cap: int, num_cams: int,
                   eval_frames: int, block_size: int, use_kernel: bool = True,
                   conf_thresh: float = 0.4, gt_pad: int = 16,
-                  t_start: int = 0, mesh: Optional[Mesh] = None
+                  t_start: int = 0, mesh: Optional[Mesh] = None,
+                  buckets: Optional[Sequence[int]] = EPISODE_BUCKETS
                   ) -> EpisodeOut:
     """Dispatch a WHOLE bandwidth trace as one compiled episode.
 
     Every argument must already be device-resident (the scheduler's
     ``run_episode`` prepares them before its timed region); this wrapper
-    only pads the camera axis, places sharded operands with explicit
-    ``device_put`` (allowed under ``jax.transfer_guard("disallow")``, which
-    blocks implicit transfers only) and calls the cached executable.
-    Returns stacked (T, 2, C) log packs + (T, 4) control packs as device
-    arrays — ONE harvest fetch at episode end is all the host ever does."""
+    only pads the camera axis AND the trace length, places sharded operands
+    with explicit ``device_put`` (allowed under
+    ``jax.transfer_guard("disallow")``, which blocks implicit transfers
+    only) and calls the cached executable.  Returns stacked (T, 2, C) log
+    packs + (T, 4) control packs as device arrays — ONE harvest fetch at
+    episode end is all the host ever does.
+
+    Trace-length bucketing: T is padded up to ``bucket_len(T, buckets)``
+    with zero-bandwidth tail slots and the active length rides along as a
+    traced scalar, so one executable per (method, bucket) serves EVERY
+    T <= bucket — a mixed-T suite stops re-tracing the fleet per trace
+    length.  Padded slots obey the ``bucket_len`` contract (no observable
+    state advances; logs here are already sliced back to T).  ``w_cap``
+    must be computed from the ACTIVE trace (``allocation.trace_capacity``
+    on the unpadded array) — the zero-Kbps padding never widens it.
+    ``buckets=None`` disables padding (the unbucketed reference program the
+    equivalence tests diff against)."""
     # the DP backtrack is only shard_map-scan-safe in its unrolled (<= 64
     # camera) form — fail loudly instead of hitting the XLA CHECK abort the
     # fori_loop fallback would trigger inside this scan (see backtrack_jax)
@@ -743,7 +821,13 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
     # out of the static cache key or every new scene would re-trace
     import dataclasses as _dc
     scene_cfg = _dc.replace(scene_cfg, seed=0)
-    T = trace.shape[0]
+    T = int(trace.shape[0])
+    T_b = bucket_len(T, buckets)
+    if T_b != T:
+        # zero-Kbps tail: padded slots run (and are discarded); zeros keep
+        # the traced DP's capacity clamp trivially satisfied there
+        trace = jnp.concatenate(
+            [jnp.asarray(trace, jnp.float32), jnp.zeros(T_b - T, jnp.float32)])
     ref0 = jnp.zeros((C_pad, scene_cfg.height, scene_cfg.width), jnp.float32)
     J = len(bitrates)
     if jcab_util is None:
@@ -762,9 +846,11 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
         sharded=mesh is not None)
     # slot indices continue from the scene's cursor (t_start) — data values,
     # not statics, so resumed episodes reuse the same executable; t_first
-    # marks this RUN's first slot (reducto's reference-reset rule)
-    t_idx = jnp.arange(T, dtype=jnp.int32) + jnp.int32(t_start)
+    # marks this RUN's first slot (reducto's reference-reset rule) and
+    # t_len the ACTIVE prefix of a bucketed trace
+    t_idx = jnp.arange(T_b, dtype=jnp.int32) + jnp.int32(t_start)
     t_first = jnp.int32(t_start)
+    t_len = jnp.int32(T)
     if mesh is not None:
         # EXPLICIT mesh placement of every operand (replicated params and
         # camera-sharded scene state) — jit would otherwise reshard
@@ -779,18 +865,24 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
             for x, s in zip(scene_params, DeviceSceneParams.pspecs())))
         ref0 = jax.device_put(ref0, cam_sh)
         (server_params, light_params, mlp_params, jcab_util, jcab_res, lam,
-         trace, t_idx, t_first, key0, skey, tau_wl, tau_wh, est0) = rep(
+         trace, t_idx, t_first, t_len, key0, skey, tau_wl, tau_wh,
+         est0) = rep(
             (server_params, light_params, mlp_params, jcab_util, jcab_res,
-             lam, trace, t_idx, t_first, key0, skey, tau_wl, tau_wh, est0))
+             lam, trace, t_idx, t_first, t_len, key0, skey, tau_wl, tau_wh,
+             est0))
     # the timed episode proper: everything is device-resident by now, so the
     # whole T-slot trace executes under the transfer guard in BOTH
     # directions with NO scoped exemptions — any per-slot upload or fetch
     # would trip it (the zero-H2D/zero-D2H acceptance check)
     with jax.transfer_guard("disallow"):
         out = fn(server_params, light_params, mlp_params, jcab_util,
-                 jcab_res, lam, scene_params, trace, t_idx, t_first, key0,
-                 skey, tau_wl, tau_wh, est0, ref0)
+                 jcab_res, lam, scene_params, trace, t_idx, t_first, t_len,
+                 key0, skey, tau_wl, tau_wh, est0, ref0)
         jax.block_until_ready(out.packs)
+    if T_b != T:
+        # harvested logs are the ACTIVE prefix only — the padded tail never
+        # reaches the host
+        out = out._replace(packs=out.packs[:T], cpacks=out.cpacks[:T])
     if C_pad != num_cams:
         out = out._replace(packs=out.packs[:, :, :num_cams])
     return out

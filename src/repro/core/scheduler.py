@@ -33,6 +33,14 @@ Three execution modes (``SystemConfig.batched`` / ``SystemConfig.episode``):
     N-slot trace executes as one ``fleet.fleet_episode`` lax.scan per
     method, under ``jax.transfer_guard("disallow")`` both directions with
     no scoped exemptions; stacked logs are harvested once at episode end.
+    Trace lengths are BUCKETED (``SystemConfig.episode_buckets``): T pads
+    up to a power-of-two bucket with masked tail slots so one executable
+    per (method, bucket) serves every T.  A padded slot runs the per-slot
+    program on dead inputs but cannot advance observable state — the
+    returned codec key chain and elastic state come from the last active
+    slot, its logs are sliced off before harvest, and the DP capacity is
+    computed from the active prefix (``allocation.trace_capacity``), so
+    bucketing never changes a pick (see ``fleet.bucket_len``).
   * sequential — the original per-camera Python loop, kept as the
     equivalence/benchmark baseline.  All modes consume PRNG keys in the
     same order, so F1/size logs agree within float tolerance — including
@@ -144,6 +152,17 @@ class SystemConfig:
     donate: bool = True                       # donate per-slot fleet buffers
     alloc: str = "device"                     # control loop: "device" | "host"
     episode: bool = False                     # whole-trace lax.scan episodes
+    # trace-length buckets for episode mode: T pads up to the smallest
+    # bucket (masked tail slots, see fleet.bucket_len for the contract) so
+    # ONE compiled episode per (method, bucket) serves every trace length.
+    # None disables bucketing (the unbucketed reference program).
+    episode_buckets: Optional[Tuple[int, ...]] = fleet_mod.EPISODE_BUCKETS
+    # optional bandwidth ceiling (Kbps) pinning the traced allocator's
+    # static DP capacity across runs: without it w_cap derives from each
+    # trace's max and every new trace re-traces the control/episode
+    # programs (w_cap is a jit static).  The scenario harness pins it so a
+    # whole (method x family x T) matrix shares executables.
+    w_cap_kbps: Optional[float] = None
 
     def __post_init__(self):
         if self.alloc not in ("device", "host"):
@@ -484,7 +503,10 @@ class DeepStreamSystem:
         work: no uploads, no fetches, no Python slot loop — callers may wrap
         it in ``jax.transfer_guard("disallow")`` with no scoped exemptions.
         Log-equivalent to the pipelined ``run()`` over the same
-        ``DeviceScene`` seeds (<= 1e-5, see tests/test_episode.py)."""
+        ``DeviceScene`` seeds (<= 1e-5, see tests/test_episode.py), for any
+        trace length: T is padded to a ``cfg.episode_buckets`` bucket inside
+        ``fleet_episode`` and the harvested logs come back already sliced
+        to the active T."""
         if use_elastic is None:
             use_elastic = method == "deepstream"
         if not (self.cfg.batched and self.cfg.alloc == "device"):
@@ -517,7 +539,8 @@ class DeepStreamSystem:
             use_elastic=use_elastic, w_cap=ctx["w_cap"], num_cams=C,
             eval_frames=self.cfg.eval_frames, block_size=self.cfg.block_size,
             use_kernel=self.cfg.use_kernels, gt_pad=self._G,
-            t_start=scene._t, mesh=self.mesh)
+            t_start=scene._t, mesh=self.mesh,
+            buckets=self.cfg.episode_buckets)
         self._t("episode", t0)
         # advance the scene cursor exactly like T pipelined segment() calls
         # would — a reused scene continues, matching the pipelined reference
@@ -603,20 +626,21 @@ class DeepStreamSystem:
         elastic borrow)."""
         cfgc = self.cfg.codec
         bitrates = tuple(int(b) for b in cfgc.bitrates_kbps)
-        W_max = float(np.max(trace_kbps))
-        if use_elastic:
-            W_max += self.cfg.elastic.budget_kbits / cfgc.slot_seconds
-        # the static capacity must also cover the all-minimum infeasibility
-        # clamp (min-bitrate x num-cameras): allocate_dp_jax folds the clamp
-        # into the swept capacity, so a trace-max-only bound would assert on
-        # low-bandwidth traces with fine-grained bitrate grids
-        W_max = max(W_max, float(min(bitrates)) *
-                    self.cfg.scene.num_cameras)
+        # the static DP capacity comes from the ACTIVE (unpadded) trace —
+        # episode bucketing appends zero-Kbps tail slots AFTER this runs, so
+        # a bucketed run solves the exact DP the unbucketed program would.
+        # cfg.w_cap_kbps optionally pins it so different traces share one
+        # compiled control program (w_cap is a jit static).
+        borrow = (self.cfg.elastic.budget_kbits / cfgc.slot_seconds
+                  if use_elastic else 0.0)
+        w_cap = alloc.trace_capacity(
+            bitrates, trace_kbps, self.cfg.scene.num_cameras,
+            elastic_borrow_kbps=borrow, pin_kbps=self.cfg.w_cap_kbps)
         ctx: Dict[str, Any] = dict(
             trace=jnp.asarray(np.asarray(trace_kbps, np.float32)),
             lam=jnp.asarray(self.cfg.lam(), jnp.float32),
             tau_wl=jnp.float32(self.tau_wl), tau_wh=jnp.float32(self.tau_wh),
-            w_cap=alloc.dp_capacity(bitrates, W_max),
+            w_cap=w_cap,
             est=elastic_mod.init_state_jax(),
             jcab_util=None, jcab_res=None)
         if method == "jcab":

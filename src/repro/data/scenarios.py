@@ -1,0 +1,189 @@
+"""Scenario matrix: named bandwidth-trace and scene families.
+
+The paper evaluates three FCC-derived bandwidth regimes (section 7.1); real
+deployments — and the systems this repro benchmarks against (BiSwift's
+competing-stream orchestration, FilterForward's constrained edge links) —
+see much uglier regimes: step drops when a competing flow starts, outages,
+short spikes, diurnal load curves, and adversarial oscillation around the
+allocator's decision boundaries.  This module is the registry the
+differential test harness and the benches draw from:
+
+  * **trace families** — ``make_trace(name, num_slots, seed)``: the paper's
+    ``fcc_low`` / ``fcc_medium`` / ``fcc_high`` plus ``step_drop``,
+    ``outage``, ``spike``, ``diurnal`` and ``adversarial_sawtooth``.  Every
+    family is a PURE function of (name, num_slots, seed) — the family name
+    folds into the RNG seed through a stable digest (``zlib.crc32``, never
+    ``hash``) so traces are identical across interpreter runs — and every
+    trace respects the 64 Kbps clip floor the paper's traces use.
+  * **scene families** — ``make_scene(name, seed)``: ``SceneConfig``
+    variants spanning camera count, object density and motion energy
+    (sparse suburbs to rush-hour junctions), again pure in (name, seed).
+
+Keep family functions closed-form over numpy: the harness regenerates them
+constantly and cross-process determinism is part of their test contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.data.synthetic import (FLOOR_KBPS, SceneConfig, ar1_trace,
+                                  bandwidth_trace)
+
+
+def _rng(name: str, seed: int) -> np.random.Generator:
+    """Stable per-(family, seed) generator: the family name enters through
+    a crc32 digest, so streams are distinct per family yet reproducible
+    across processes (``hash`` is salted by PYTHONHASHSEED)."""
+    return np.random.default_rng((int(seed), zlib.crc32(name.encode())))
+
+
+# -- bandwidth-trace families -------------------------------------------------
+
+def _fcc(kind: str):
+    def fam(num_slots: int, seed: int = 0) -> np.ndarray:
+        return bandwidth_trace(kind, num_slots, seed=seed)
+    fam.__name__ = f"fcc_{kind}"
+    fam.__doc__ = f"The paper's FCC-like '{kind}' regime (section 7.1)."
+    return fam
+
+
+def step_drop(num_slots: int, seed: int = 0) -> np.ndarray:
+    """Competing-flow step: a high regime that collapses to a low one at a
+    seed-chosen slot and stays there (BiSwift's contention onset)."""
+    rng = _rng("step_drop", seed)
+    t0 = int(rng.integers(1, max(2, num_slots // 2 + 1)))
+    mu = np.where(np.arange(num_slots) < t0, 2200.0, 450.0)
+    return np.clip(ar1_trace(rng, mu, 180.0, num_slots), FLOOR_KBPS, None)
+
+
+def outage(num_slots: int, seed: int = 0) -> np.ndarray:
+    """Medium regime with a hard outage window clamped to the 64 Kbps floor
+    — exercises the infeasibility clamp and elastic debt repayment."""
+    rng = _rng("outage", seed)
+    x = ar1_trace(rng, 1134.0, 400.0, num_slots)
+    t0 = int(rng.integers(0, max(1, num_slots - 1)))
+    width = max(1, num_slots // 4)
+    x[t0:t0 + width] = 0.0
+    return np.clip(x, FLOOR_KBPS, None)
+
+
+def spike(num_slots: int, seed: int = 0) -> np.ndarray:
+    """Starved link with rare huge openings: low base, ~20% of slots jump
+    to several Mbps — stresses allocator swings slot-to-slot."""
+    rng = _rng("spike", seed)
+    x = np.clip(ar1_trace(rng, 400.0, 120.0, num_slots), FLOOR_KBPS, None)
+    hits = rng.uniform(size=num_slots) < 0.2
+    if not hits.any():
+        hits[int(rng.integers(num_slots))] = True
+    return np.where(hits, rng.uniform(2500.0, 6000.0, num_slots), x)
+
+
+def diurnal(num_slots: int, seed: int = 0) -> np.ndarray:
+    """Slow sinusoidal load curve between the low and high regimes with
+    AR(1) noise on top (a day compressed into the trace length)."""
+    rng = _rng("diurnal", seed)
+    t = np.arange(num_slots)
+    phase = rng.uniform(0, 2 * np.pi)
+    mu = 1400.0 + 900.0 * np.sin(2 * np.pi * t / max(num_slots, 2) + phase)
+    return np.clip(ar1_trace(rng, mu, 150.0, num_slots), FLOOR_KBPS, None)
+
+
+def adversarial_sawtooth(num_slots: int, seed: int = 0) -> np.ndarray:
+    """Ramp-and-crash oscillation spanning the whole bitrate grid: climbs
+    from starvation to abundance over a few slots, then collapses — the
+    worst case for any controller with memory (elastic EMA/debt)."""
+    rng = _rng("adversarial_sawtooth", seed)
+    period = int(rng.integers(3, 6))
+    t = np.arange(num_slots)
+    ramp = (t % period) / max(period - 1, 1)
+    mu = 150.0 + (3200.0 - 150.0) * ramp
+    return np.clip(mu + rng.normal(0, 60.0, num_slots), FLOOR_KBPS, None)
+
+
+TRACE_FAMILIES: Dict[str, Callable[..., np.ndarray]] = {
+    "fcc_low": _fcc("low"),
+    "fcc_medium": _fcc("medium"),
+    "fcc_high": _fcc("high"),
+    "step_drop": step_drop,
+    "outage": outage,
+    "spike": spike,
+    "diurnal": diurnal,
+    "adversarial_sawtooth": adversarial_sawtooth,
+}
+
+# the paper's traces are sized for its 5-camera deployments; scale shares
+# linearly when evaluating other fleet sizes (the convention the test suite
+# already uses: ``bandwidth_trace(...) * C / 5``)
+TRACE_REFERENCE_CAMS = 5
+
+
+def trace_families() -> Tuple[str, ...]:
+    return tuple(TRACE_FAMILIES)
+
+
+def make_trace(name: str, num_slots: int, seed: int = 0,
+               num_cams: Optional[int] = None) -> np.ndarray:
+    """One named bandwidth trace, pure in (name, num_slots, seed).  With
+    ``num_cams`` the trace is rescaled from the paper's 5-camera sizing to
+    the given fleet size (floor preserved)."""
+    fam = TRACE_FAMILIES[name]
+    x = np.asarray(fam(int(num_slots), seed=int(seed)), np.float64)
+    if x.shape != (int(num_slots),) or not np.all(x >= FLOOR_KBPS - 1e-9):
+        # ValueError, not assert (stripped under python -O): a family that
+        # forgets the floor clip must not reach the allocator silently
+        raise ValueError(f"family {name!r} broke the trace contract: "
+                         f"shape {x.shape}, min {x.min() if x.size else None}")
+    if num_cams is not None:
+        x = np.clip(x * (int(num_cams) / TRACE_REFERENCE_CAMS),
+                    FLOOR_KBPS, None)
+    return x
+
+
+# -- scene families -----------------------------------------------------------
+#
+# Each family fixes the knobs that shape content statistics — camera count,
+# object count, motion energy, sensor noise — and leaves the geometry draw
+# to the seed.  NOTE for executable reuse: num_cameras / max_objects /
+# noise_std participate in the episode program's shapes or statics, so
+# families sharing those values share compiled fleet programs; the harness
+# groups its cells accordingly.
+
+def _scene(seed: int, **over) -> SceneConfig:
+    """A family is a fixed knob set; the geometry draw comes entirely from
+    the seed.  Unlike trace families (whose name folds into the RNG via
+    ``_rng``), a scene family name carries no RNG stream of its own — two
+    families with identical knobs would share geometry by design."""
+    return dataclasses.replace(SceneConfig(seed=int(seed)), **over)
+
+
+SCENE_FAMILIES: Dict[str, Callable[[int], SceneConfig]] = {
+    # the default three-camera street scene most tests run
+    "urban_mid": lambda seed: _scene(seed, num_cameras=3),
+    # sparse traffic, slow movers: motion energy near the keep threshold
+    "sparse_suburb": lambda seed: _scene(
+        seed, num_cameras=3, max_objects=3, spawn_rate=0.1, mean_speed=1.5),
+    # saturated junction: object count at the pool cap, fast crossings
+    "dense_junction": lambda seed: _scene(
+        seed, num_cameras=3, max_objects=8, spawn_rate=0.9, mean_speed=5.0),
+    # night shift: calm motion under heavy sensor noise
+    "night_noise": lambda seed: _scene(
+        seed, num_cameras=3, mean_speed=1.0, spawn_rate=0.15, noise_std=0.05),
+    # minimal two-camera deployment (smallest fleet the allocator sees)
+    "cam_pair": lambda seed: _scene(seed, num_cameras=2),
+    # wider fleet with energetic motion (exercises camera-axis padding on
+    # meshes and the fair-share allocator's granularity)
+    "mall_quad": lambda seed: _scene(seed, num_cameras=4, mean_speed=4.0),
+}
+
+
+def scene_families() -> Tuple[str, ...]:
+    return tuple(SCENE_FAMILIES)
+
+
+def make_scene(name: str, seed: int = 0) -> SceneConfig:
+    """One named SceneConfig, pure in (name, seed)."""
+    return SCENE_FAMILIES[name](int(seed))

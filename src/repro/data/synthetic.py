@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import zlib
 from dataclasses import dataclass
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
@@ -462,18 +463,37 @@ class DeviceScene:
                              "gt_dev": (gtb, gtv)}, {"boxes": boxes})
 
 
-def bandwidth_trace(kind: str, num_slots: int, seed: int = 0) -> np.ndarray:
-    """FCC-like traces with the paper's means/stds (Kbps):
-    low 521/230, medium 1134/499, high 2305/1397 (section 7.1)."""
-    params = {"low": (521.0, 230.0), "medium": (1134.0, 499.0),
+# the paper's FCC regime parameters (mean, std) in Kbps (section 7.1) and
+# the clip floor its traces respect — the ONE copy bandwidth_trace, the
+# scenario families and the trace property tests all read
+FCC_PARAMS = {"low": (521.0, 230.0), "medium": (1134.0, 499.0),
               "high": (2305.0, 1397.0)}
-    mu, sd = params[kind]
-    rng = np.random.default_rng(seed + hash(kind) % 1000)
-    # AR(1) for realistic temporal correlation, matched mean/std
-    rho = 0.8
+FLOOR_KBPS = 64.0
+
+
+def ar1_trace(rng: np.random.Generator, mu, sd: float, num_slots: int,
+              rho: float = 0.8) -> np.ndarray:
+    """AR(1) around a (scalar or per-slot) mean — the temporal-correlation
+    model every bandwidth family shares (``bandwidth_trace`` and the
+    synthetic ``data.scenarios`` families).  Draw order (innovations first,
+    then x[0]) is part of the reproducibility contract."""
+    mu = np.broadcast_to(np.asarray(mu, np.float64), (num_slots,))
     eps = rng.normal(0, sd * np.sqrt(1 - rho ** 2), num_slots)
     x = np.empty(num_slots)
-    x[0] = mu + rng.normal(0, sd)
+    x[0] = mu[0] + rng.normal(0, sd)
     for t in range(1, num_slots):
-        x[t] = mu + rho * (x[t - 1] - mu) + eps[t]
-    return np.clip(x, 64.0, None)
+        x[t] = mu[t] + rho * (x[t - 1] - mu[t]) + eps[t]
+    return x
+
+
+def bandwidth_trace(kind: str, num_slots: int, seed: int = 0) -> np.ndarray:
+    """FCC-like traces with the paper's means/stds (``FCC_PARAMS``,
+    section 7.1), AR(1)-correlated, clipped at the 64 Kbps floor.
+
+    Deterministic in (kind, seed) ACROSS interpreter runs: the kind folds
+    into the seed through a stable digest (``zlib.crc32``) — the old
+    ``hash(kind)`` depended on ``PYTHONHASHSEED``, so "reproducible" traces
+    silently differed between processes."""
+    mu, sd = FCC_PARAMS[kind]
+    rng = np.random.default_rng(seed + zlib.crc32(kind.encode()) % 1000)
+    return np.clip(ar1_trace(rng, mu, sd, num_slots), FLOOR_KBPS, None)

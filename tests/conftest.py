@@ -13,11 +13,11 @@ if _fake:
         f"--xla_force_host_platform_device_count={int(_fake)}")
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
 try:
     import hypothesis  # noqa: F401
 except ImportError:
-    sys.path.insert(0, str(Path(__file__).resolve().parent))
     from _hypothesis_shim import install as _install_hyp_shim
     _install_hyp_shim()
 
@@ -28,11 +28,10 @@ import pytest
 
 @pytest.fixture(scope="session")
 def detectors():
-    """Session-cached light+server detectors (trained once, ckpt-cached)."""
-    from repro.train.detector_train import train_detector
-    server = train_detector("server", steps=600, batch=12, cache=True)
-    light = train_detector("light", steps=300, batch=12, cache=True)
-    return light, server
+    """Session-cached light+server detectors (trained once, ckpt-cached);
+    the recipe lives in tests/harness.py, shared with the golden writer."""
+    from harness import train_default_detectors
+    return train_default_detectors()
 
 
 @pytest.fixture()
