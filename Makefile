@@ -17,11 +17,17 @@
 # `ci-scenarios` replays the scenario matrix (cross-mode differential
 # harness, trace-length bucketing, golden logs) on the 8-device mesh in the
 # harness's quick mode (reduced family set).
+# `ci-faults` is the fault-tolerance lane: traced camera-churn/link-fault
+# episodes (the dead==absent differential across all methods and runner
+# modes), the checkify-guarded diagnostics runs (SystemConfig.checked on,
+# invariant violations must raise), and the watchdog/supervisor recovery
+# ladder.  Runs WITHOUT fake devices: the checked lane forces shard off.
 # Lane pytest selections live ONCE, in tests/harness.py (LANES) — the lanes
 # shell out to it instead of duplicating test lists here.
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-quick ci ci-sharded ci-guard ci-episode ci-scenarios
+.PHONY: test bench-quick ci ci-sharded ci-guard ci-episode ci-scenarios \
+	ci-faults
 
 test:
 	$(PY) -m pytest -q
@@ -43,4 +49,7 @@ ci-scenarios:
 	REPRO_FAKE_DEVICES=8 REPRO_SCENARIO_QUICK=1 $(PY) tests/harness.py \
 		--lane scenarios
 
-ci: test bench-quick ci-sharded ci-guard ci-episode ci-scenarios
+ci-faults:
+	$(PY) tests/harness.py --lane faults
+
+ci: test bench-quick ci-sharded ci-guard ci-episode ci-scenarios ci-faults

@@ -205,6 +205,86 @@ def _episode_compare(base, num_cameras: int, n_slots: int,
     return out
 
 
+def _fault_overhead(base, num_cameras: int, n_slots: int,
+                    reps: int = 3) -> dict:
+    """Cost of the fault-tolerance machinery on the episode path.
+
+    Three interleaved contenders on identical device-generated segments:
+    the fault-free episode (liveness defaults to all-True — the SAME
+    executable the masked run uses, since liveness is traced data), the
+    same program with a camera_churn mask, and the checkify-guarded lane
+    (``SystemConfig.checked``, which forces kernels/shard/donate off — its
+    ratio is the price of turning diagnostics ON; with ``checked=False``
+    nothing checkify-related is compiled in at all, so the disabled
+    overhead is structural zero and ``liveness_mask_overhead`` is the only
+    number that can regress the default path)."""
+    from repro.core import fleet as fleet_mod
+    from repro.core.scheduler import DeepStreamSystem, SystemConfig
+    from repro.data.scenarios import make_faults
+    from repro.data.synthetic import DeviceScene
+
+    trace = bandwidth_trace("medium", n_slots, seed=5)
+    faults = make_faults("camera_churn", n_slots, num_cameras, seed=3)
+
+    def build(checked):
+        cfg = SystemConfig(scene=SceneConfig(seed=31, num_cameras=num_cameras),
+                           eval_frames=base.cfg.eval_frames, batched=True,
+                           shard="auto", episode=True,
+                           episode_buckets=(n_slots,), w_cap_kbps=6000.0,
+                           checked=checked)
+        sysd = DeepStreamSystem(cfg, base.light, base.server, base.mlp)
+        sysd.tau_wl, sysd.tau_wh = base.tau_wl, base.tau_wh
+        sysd.jcab_table = base.jcab_table
+        sysd.run(DeviceScene(SceneConfig(seed=7, num_cameras=num_cameras)),
+                 bandwidth_trace("medium", n_slots, seed=9),
+                 method="deepstream")
+        return sysd
+
+    plain = build(False)
+    checked = build(True)
+    variants = {
+        "faults_off": (plain, None),
+        "faults_on": (plain, faults),
+        "checked_faults_on": (checked, faults),
+    }
+    times = {name: [] for name in variants}
+    masked_compiles = None
+    for rep in range(reps):
+        for name, (sysd, fl) in variants.items():
+            sysd._key = jax.random.PRNGKey(4242)
+            n0 = fleet_mod.episode_compile_count()
+            scene = DeviceScene(SceneConfig(seed=13, num_cameras=num_cameras))
+            t0 = time.perf_counter()
+            sysd.run(scene, trace, method="deepstream", faults=fl)
+            times[name].append((time.perf_counter() - t0) / n_slots * 1e3)
+            if name == "faults_on":
+                # the mask must ride the warm fault-free executable
+                masked_compiles = (masked_compiles or 0) \
+                    + fleet_mod.episode_compile_count() - n0
+    ms = {name: float(np.min(t)) for name, t in times.items()}
+    return {
+        "num_cameras": num_cameras, "slots": n_slots,
+        "faults_off_ms_per_slot": ms["faults_off"],
+        "faults_on_ms_per_slot": ms["faults_on"],
+        "checked_ms_per_slot": ms["checked_faults_on"],
+        "liveness_mask_overhead": ms["faults_on"] / ms["faults_off"],
+        "checked_overhead": ms["checked_faults_on"] / ms["faults_on"],
+        "masked_run_compiles": masked_compiles,
+    }
+
+
+def _print_fault_overhead(fo: dict) -> None:
+    print(f"\n[faults] episode fault-machinery overhead "
+          f"(C={fo['num_cameras']}, {fo['slots']} slots, interleaved min):")
+    print(f"  faults off   {fo['faults_off_ms_per_slot']:9.1f} ms/slot")
+    print(f"  faults on    {fo['faults_on_ms_per_slot']:9.1f} ms/slot   "
+          f"({fo['liveness_mask_overhead']:.3f}x, "
+          f"{fo['masked_run_compiles']} new compiles)")
+    print(f"  checked      {fo['checked_ms_per_slot']:9.1f} ms/slot   "
+          f"({fo['checked_overhead']:.2f}x vs faults on; diagnostics lane "
+          f"— kernels/shard forced off)")
+
+
 def _print_episode(cmp: dict) -> None:
     print(f"\n[episode] whole-trace scan vs pipelined device-alloc "
           f"(C={cmp['num_cameras']}, {cmp['slots']} slots, interleaved min):")
@@ -340,10 +420,14 @@ def run(quick: bool = False) -> dict:
                            n_slots=4 if quick else 8,
                            reps=2 if quick else 3)
     _print_episode(ep8)
+    fo8 = _fault_overhead(sysd, num_cameras=8, n_slots=4 if quick else 8,
+                          reps=2 if quick else 3)
+    _print_fault_overhead(fo8)
     out = {"stages_ms": stages,
            "alloc_placement": sysd.cfg.alloc,   # stage run's allocator mode
            "fleet_comparison": cmp8,
            "episode_comparison": ep8,
+           "fault_overhead": fo8,
            "headline": (f"episode {ep8['speedup_episode_vs_pipelined']:.2f}x "
                         f"vs pipelined device-alloc @C=8/{cmp8['devices']}dev "
                         f"(udiff {ep8['max_utility_diff_episode']:.1e}, "
@@ -355,7 +439,8 @@ def run(quick: bool = False) -> dict:
                   "speedup_episode_vs_pipelined",
                   "speedup_episode_vs_host_scene", "zero_per_slot_transfers")
     trajectory = {"bench": "bench_latency",
-                  "episode_vs_pipelined_c8": {k: ep8[k] for k in _traj_keys}}
+                  "episode_vs_pipelined_c8": {k: ep8[k] for k in _traj_keys},
+                  "fault_overhead_c8": fo8}
     if not quick:
         cmp16 = _compare_modes(sysd, num_cameras=16, n_slots=4)
         _print_cmp(cmp16)
@@ -365,5 +450,9 @@ def run(quick: bool = False) -> dict:
         out["episode_comparison_c16"] = ep16
         trajectory["episode_vs_pipelined_c16"] = {
             k: ep16[k] for k in _traj_keys}
+        fo16 = _fault_overhead(sysd, num_cameras=16, n_slots=4)
+        _print_fault_overhead(fo16)
+        out["fault_overhead_c16"] = fo16
+        trajectory["fault_overhead_c16"] = fo16
     out["trajectory"] = trajectory
     return out

@@ -21,6 +21,13 @@ Every allocator has two implementations:
     (``dp_capacity``) and backtracks on device against the traced W, so a
     whole bandwidth trace shares one compiled sweep and picks never visit
     the host.
+
+Fault contract (both implementations): every allocator takes an optional
+``live`` camera mask — dead cameras are excluded from the solve (they pay
+nothing, receive 0 Kbps, never constrain the live cameras' shares) — and a
+zero (or negative) capacity returns an explicit all-zero infeasible
+allocation instead of leaning on the 64 Kbps trace floor to keep the code
+path unreachable.  Host and traced variants agree on both.
 """
 from __future__ import annotations
 
@@ -92,6 +99,11 @@ def trace_capacity(bitrates: Sequence[int], trace_kbps, num_cams: int, *,
                 f"(needs >= {W_max} Kbps incl. elastic borrow + clamp); "
                 "raise the pin or drop it")
         W_max = float(pin_kbps)
+    # liveness headroom: ``allocate_dp_jax`` carries a dead camera as a
+    # forced minimum-bitrate row and shifts the backtrack capacity up by
+    # min-bitrate per dead camera, so the swept capacity must cover the
+    # all-dead-but-one worst case for fault episodes to share one program
+    W_max += float(min(int(b) for b in bitrates)) * int(num_cams)
     return dp_capacity(bitrates, W_max)
 
 
@@ -113,25 +125,46 @@ def build_utility_table(mlp_params, a: np.ndarray, c: np.ndarray,
 
 def allocate_dp(util: np.ndarray, best_res: np.ndarray,
                 bitrates: Sequence[int], W_kbps: float,
-                use_kernel: bool = True) -> Allocation:
+                use_kernel: bool = True,
+                live: Optional[np.ndarray] = None) -> Allocation:
     bitr, d = _grid(bitrates)
     costs = (bitr // d).astype(np.int32)
     Wg = int(W_kbps // d)
     I = util.shape[0]
-    if costs.min() * I > Wg:   # infeasible: clamp to minimum bitrate everywhere
-        j = int(np.argmin(costs))
-        return Allocation(np.full(I, bitr[j], np.float64),
-                          best_res[:, j].astype(np.float64),
-                          float(util[:, j].sum()), feasible=False)
-    picks, total = dp_ops.solve(util, costs, Wg, use_kernel=use_kernel)
-    return Allocation(bitr[picks].astype(np.float64),
-                      best_res[np.arange(I), picks].astype(np.float64),
+    live = np.ones(I, bool) if live is None else np.asarray(live, bool)
+    n_live = int(live.sum())
+    n_dead = I - n_live
+    jmin = int(np.argmin(costs))
+    cmin = int(costs[jmin])
+    iidx = np.arange(I)
+    if W_kbps <= 0.0:          # hard outage: nothing can be sent at all
+        return Allocation(np.zeros(I, np.float64), np.ones(I, np.float64),
+                          0.0, feasible=False)
+    if cmin * n_live > Wg:     # infeasible: clamp live cameras to minimum
+        return Allocation(np.where(live, float(bitr[jmin]), 0.0),
+                          np.where(live, best_res[:, jmin], 1.0)
+                          .astype(np.float64),
+                          float(util[live, jmin].sum()), feasible=False)
+    # dead cameras ride through the DP as forced rows (the traced variant
+    # cannot drop rows — shapes are static): their only non-penalized option
+    # is the cheapest one at zero utility, and the swept capacity grows by
+    # exactly what those forced picks cost, so the live cameras solve the
+    # same DP a dead-row-free table would
+    util_eff = np.where(live[:, None], util,
+                        np.where(np.arange(util.shape[1])[None, :] == jmin,
+                                 0.0, -1e9))
+    picks, total = dp_ops.solve(util_eff.astype(util.dtype), costs,
+                                Wg + n_dead * cmin, use_kernel=use_kernel)
+    return Allocation(np.where(live, bitr[picks].astype(np.float64), 0.0),
+                      np.where(live, best_res[iidx, picks], 1.0)
+                      .astype(np.float64),
                       float(total), feasible=True)
 
 
 def allocate_dp_jax(util: jax.Array, best_res: jax.Array,
                     bitrates: Sequence[int], W_kbps: jax.Array, *,
-                    w_cap: int, use_kernel: bool = True
+                    w_cap: int, use_kernel: bool = True,
+                    live: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                                jax.Array]:
     """Traced ``allocate_dp``: device arrays in, device arrays out.
@@ -152,27 +185,49 @@ def allocate_dp_jax(util: jax.Array, best_res: jax.Array,
     host path clamps to, total included.  Besides being branchless, this
     sidesteps an XLA sharding-propagation crash on scalar-broadcast selects
     over ``fori_loop`` outputs inside shard_map'd scan bodies (the episode
-    runner's control stage)."""
+    runner's control stage).
+
+    ``live`` (a TRACED (I,) bool mask, default all-alive) excludes dead
+    cameras the same folded way: a dead row's only non-penalized option is
+    the cheapest one at zero utility and the backtrack capacity grows by
+    exactly those forced picks' cost, so live cameras solve the DP a
+    dead-row-free table would; dead bitrates are then zeroed (they send
+    nothing).  ``trace_capacity`` reserves min-bitrate-per-camera headroom
+    in w_cap for the shifted capacity.  W <= 0 zeroes every bitrate with
+    ``feasible=False`` (masks throughout — no scalar selects on backtracked
+    outputs, per the crash note above)."""
     bitr, d = _grid(bitrates)
     costs = (bitr // d).astype(np.int32)
-    I = util.shape[0]
-    cmin = int(costs.min())
+    I, J = util.shape
+    jmin = int(np.argmin(costs))
+    cmin = int(costs[jmin])
     assert cmin * I <= w_cap, (
         f"w_cap={w_cap} cannot express the all-minimum clamp for {I} cameras "
         f"(needs >= {cmin * I}); raise dp_capacity's W_max")
-    Wg = jnp.minimum(jnp.floor(jnp.asarray(W_kbps, jnp.float32) / d)
-                     .astype(jnp.int32), w_cap)
-    feasible = cmin * I <= Wg
-    picks, total = dp_ops.solve_device(util, jnp.asarray(costs),
-                                       jnp.maximum(Wg, cmin * I),
+    W = jnp.asarray(W_kbps, jnp.float32)
+    open_ = W > 0.0
+    live = jnp.ones((I,), bool) if live is None else jnp.asarray(live, bool)
+    n_live = jnp.sum(live.astype(jnp.int32))
+    util_eff = jnp.where(live[:, None], util,
+                         jnp.where(jnp.arange(J)[None, :] == jmin,
+                                   jnp.zeros((), util.dtype),
+                                   jnp.full((), -1e9, util.dtype)))
+    Wg = jnp.minimum(jnp.floor(W / d).astype(jnp.int32), w_cap)
+    feasible = (cmin * n_live <= Wg) & open_
+    Wg_eff = jnp.minimum(Wg + (I - n_live) * cmin, w_cap)
+    picks, total = dp_ops.solve_device(util_eff, jnp.asarray(costs),
+                                       jnp.maximum(Wg_eff, cmin * I),
                                        w_cap=w_cap, use_kernel=use_kernel)
-    b = jnp.asarray(bitr, jnp.float32)[picks]
-    res = best_res[jnp.arange(I), picks]
+    tx = live & open_
+    b = jnp.where(tx, jnp.asarray(bitr, jnp.float32)[picks], 0.0)
+    res = jnp.where(tx, best_res[jnp.arange(I), picks], 1.0)
+    total = total * open_.astype(total.dtype)
     return picks, b, res, total, feasible
 
 
 def allocate_greedy(util: np.ndarray, best_res: np.ndarray,
-                    bitrates: Sequence[int], W_kbps: float) -> Allocation:
+                    bitrates: Sequence[int], W_kbps: float,
+                    live: Optional[np.ndarray] = None) -> Allocation:
     """Greedy marginal-utility-per-Kbps upgrades (continuous-variant heuristic).
 
     Zero-gain upgrades ARE taken (positive gains still win the argmax): on
@@ -181,16 +236,21 @@ def allocate_greedy(util: np.ndarray, best_res: np.ndarray,
     below later positive-gain upgrades and diverge from the DP."""
     bitr = np.asarray(bitrates, np.float64)
     I, J = util.shape
+    live = np.ones(I, bool) if live is None else np.asarray(live, bool)
+    iidx = np.arange(I)
+    if W_kbps <= 0:
+        return Allocation(np.zeros(I), np.ones(I), 0.0, feasible=False)
     picks = np.zeros(I, np.int64)
-    budget = W_kbps - bitr[0] * I
+    budget = W_kbps - bitr[0] * int(live.sum())
     if budget < 0:
-        return Allocation(np.full(I, bitr[0]), best_res[:, 0],
-                          float(util[:, 0].sum()), feasible=False)
+        return Allocation(np.where(live, bitr[0], 0.0),
+                          np.where(live, best_res[:, 0], 1.0),
+                          float(util[live, 0].sum()), feasible=False)
     while True:
         best_gain, best_i = -1.0, -1
         for i in range(I):
             j = picks[i]
-            if j + 1 < J:
+            if live[i] and j + 1 < J:
                 dc = bitr[j + 1] - bitr[j]
                 gain = (util[i, j + 1] - util[i, j]) / max(dc, 1e-9)
                 if dc <= budget and gain >= 0.0 and gain > best_gain:
@@ -200,27 +260,34 @@ def allocate_greedy(util: np.ndarray, best_res: np.ndarray,
         j = picks[best_i]
         budget -= bitr[j + 1] - bitr[j]
         picks[best_i] = j + 1
-    return Allocation(bitr[picks], best_res[np.arange(I), picks],
-                      float(util[np.arange(I), picks].sum()), feasible=True)
+    return Allocation(np.where(live, bitr[picks], 0.0),
+                      np.where(live, best_res[iidx, picks], 1.0),
+                      float(util[iidx, picks][live].sum()), feasible=True)
 
 
 def allocate_greedy_jax(util: jax.Array, best_res: jax.Array,
-                        bitrates: Sequence[int], W_kbps: jax.Array
+                        bitrates: Sequence[int], W_kbps: jax.Array,
+                        live: Optional[jax.Array] = None
                         ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                    jax.Array, jax.Array]:
     """Traced ``allocate_greedy`` (the device fallback when the DP kernel is
     off): a ``while_loop`` of vectorized upgrade rounds, same tie/plateau
     handling (zero-gain upgrades taken, first-max camera wins ties).
-    Returns (picks, b, res, total, feasible)."""
+    Returns (picks, b, res, total, feasible).  ``live`` (traced, default
+    all-alive) removes dead cameras from the base cost and the upgrade set;
+    W <= 0 zeroes everything with ``feasible=False``."""
     bitr = jnp.asarray(bitrates, jnp.float32)
     I, J = util.shape
     iidx = jnp.arange(I)
-    budget0 = jnp.asarray(W_kbps, jnp.float32) - bitr[0] * I
-    feasible = budget0 >= 0
+    live = jnp.ones((I,), bool) if live is None else jnp.asarray(live, bool)
+    W = jnp.asarray(W_kbps, jnp.float32)
+    open_ = W > 0.0
+    budget0 = W - bitr[0] * jnp.sum(live.astype(jnp.float32))
+    feasible = (budget0 >= 0) & open_
 
     def body(carry):
         picks, budget, _ = carry
-        can = picks + 1 < J
+        can = (picks + 1 < J) & live
         jn = jnp.where(can, picks + 1, picks)
         dc = bitr[jn] - bitr[picks]
         gain = (util[iidx, jn] - util[iidx, picks]) / jnp.maximum(dc, 1e-9)
@@ -234,14 +301,17 @@ def allocate_greedy_jax(util: jax.Array, best_res: jax.Array,
     picks, _, _ = jax.lax.while_loop(
         lambda carry: carry[2], body,
         (jnp.zeros(I, jnp.int32), budget0, feasible))
-    b = bitr[picks]
-    res = best_res[iidx, picks]
-    total = jnp.sum(util[iidx, picks])
+    tx = live & open_
+    b = jnp.where(tx, bitr[picks], 0.0)
+    res = jnp.where(tx, best_res[iidx, picks], 1.0)
+    total = jnp.sum(jnp.where(live, util[iidx, picks], 0.0)) \
+        * open_.astype(util.dtype)
     return picks, b, res, total, feasible
 
 
 def allocate_fair(bitrates: Sequence[int], W_kbps: float,
-                  num_cams: int) -> Allocation:
+                  num_cams: int,
+                  live: Optional[np.ndarray] = None) -> Allocation:
     """Equal-share baseline: largest bitrate <= W/I per camera (Reducto-style
     fair split; also the 'static' baseline given a fixed W).
 
@@ -249,24 +319,35 @@ def allocate_fair(bitrates: Sequence[int], W_kbps: float,
     when W/I is below every option the minimum bitrate is assigned with
     ``feasible=False``.  Fair split is content-blind, so ``resolutions`` is
     all-ones and ``predicted_utility`` 0.0 (there is no utility table to
-    predict from)."""
-    share = W_kbps / num_cams
+    predict from).  Dead cameras (``live`` mask) neither receive a share
+    nor dilute the live cameras'; W <= 0 is the all-zero infeasible case."""
+    live = np.ones(num_cams, bool) if live is None else np.asarray(live, bool)
+    if W_kbps <= 0:
+        return Allocation(np.zeros(num_cams), np.ones(num_cams), 0.0,
+                          feasible=False)
+    share = W_kbps / max(int(live.sum()), 1)
     bitr = np.asarray(bitrates, np.float64)
     feas = bitr[bitr <= share]
     feasible = len(feas) > 0
     b = feas.max() if feasible else bitr.min()
-    return Allocation(np.full(num_cams, b), np.ones(num_cams), 0.0,
+    return Allocation(np.where(live, b, 0.0), np.ones(num_cams), 0.0,
                       feasible=feasible)
 
 
 def allocate_fair_jax(bitrates: Sequence[int], W_kbps: jax.Array,
-                      num_cams: int) -> Tuple[jax.Array, jax.Array]:
+                      num_cams: int,
+                      live: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
     """Traced ``allocate_fair``: returns ((I,) bitrates, feasible) on
     device."""
     bitr = jnp.asarray(bitrates, jnp.float32)
-    share = jnp.asarray(W_kbps, jnp.float32) / num_cams
+    live = jnp.ones((num_cams,), bool) if live is None \
+        else jnp.asarray(live, bool)
+    W = jnp.asarray(W_kbps, jnp.float32)
+    open_ = W > 0.0
+    share = W / jnp.maximum(jnp.sum(live.astype(jnp.float32)), 1.0)
     ok = bitr <= share
     feasible = jnp.any(ok)
     b = jnp.where(feasible, jnp.max(jnp.where(ok, bitr, -jnp.inf)),
                   jnp.min(bitr))
-    return jnp.full((num_cams,), 1.0, jnp.float32) * b, feasible
+    return jnp.where(live & open_, b, 0.0), feasible & open_

@@ -22,11 +22,21 @@ import jax.numpy as jnp
 INF = jnp.int32(2 ** 30)
 
 
-@functools.partial(jax.jit, static_argnames=("max_boxes",))
-def label_and_boxes(mask: jax.Array, max_boxes: int = 16
+@functools.partial(jax.jit, static_argnames=("max_boxes", "bounded"))
+def label_and_boxes(mask: jax.Array, max_boxes: int = 16,
+                    bounded: bool = False
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """mask (M, N) bool -> (boxes (K,4) int32 [x0,y0,x1,y1) in block coords,
-    valid (K,) bool, labels (M,N) int32).  Boxes sorted by area desc."""
+    valid (K,) bool, labels (M,N) int32).  Boxes sorted by area desc.
+
+    ``bounded`` swaps the until-fixpoint ``while_loop`` for a fixed
+    ``fori_loop`` of M*N sweeps — the while's own iteration cap, so the
+    fixpoint (hence every output) is identical, at O((M*N)^2) worst-case
+    work instead of O(component diameter).  It exists for
+    ``jax.experimental.checkify``: the checked diagnostics lane can't
+    functionalize a batched-predicate while-loop (this one is vmapped per
+    camera with a data-dependent cond), while a fori_loop transforms
+    cleanly.  Keep it off on hot paths."""
     M, N = mask.shape
     idx = jnp.arange(M * N, dtype=jnp.int32).reshape(M, N)
     labels = jnp.where(mask, idx, INF)
@@ -38,16 +48,20 @@ def label_and_boxes(mask: jax.Array, max_boxes: int = 16
             jnp.minimum(p[1:-1, :-2], p[1:-1, 2:]))
         return jnp.where(mask, jnp.minimum(labels, neigh), INF)
 
-    def cond(state):
-        labels, prev, it = state
-        return jnp.logical_and(jnp.any(labels != prev), it < M * N)
+    if bounded:
+        labels = jax.lax.fori_loop(0, M * N, lambda _, l: propagate(l),
+                                   propagate(labels))
+    else:
+        def cond(state):
+            labels, prev, it = state
+            return jnp.logical_and(jnp.any(labels != prev), it < M * N)
 
-    def body(state):
-        labels, _, it = state
-        return propagate(labels), labels, it + 1
+        def body(state):
+            labels, _, it = state
+            return propagate(labels), labels, it + 1
 
-    labels, _, _ = jax.lax.while_loop(
-        cond, body, (propagate(labels), labels, jnp.int32(0)))
+        labels, _, _ = jax.lax.while_loop(
+            cond, body, (propagate(labels), labels, jnp.int32(0)))
 
     # box extraction: segment min/max of row/col per root label
     flat = labels.reshape(-1)

@@ -66,12 +66,17 @@ def offline_thresholds(cfg: ElasticConfig, acc_table: np.ndarray,
 
 
 def update(cfg: ElasticConfig, state: ElasticState, total_area: float,
-           W_kbps: float, tau_wl: float, tau_wh: float
-           ) -> Tuple[ElasticState, float, dict]:
+           W_kbps: float, tau_wl: float, tau_wh: float,
+           reset_debt: bool = False) -> Tuple[ElasticState, float, dict]:
     """One slot.  Returns (new_state, extra_capacity_kbits, log).
 
     extra_capacity_kbits: additional data volume the allocator may schedule
     this slot (the +D term); negative values model early slot finish (repay).
+
+    ``reset_debt`` clears the outstanding debt BEFORE this slot's
+    borrow/repay: the fault contract for camera reconnects — a camera that
+    rejoins the fleet must not claim bandwidth that was borrowed against a
+    fleet it was no longer part of (nor owe repayment for it).
     """
     if not state.initialized:
         st = ElasticState(a_ema=total_area, a_var=0.0, debt_kbits=0.0,
@@ -84,7 +89,7 @@ def update(cfg: ElasticConfig, state: ElasticState, total_area: float,
 
     borrowed = 0.0
     repaid = 0.0
-    debt = state.debt_kbits
+    debt = 0.0 if reset_debt else state.debt_kbits
     if total_area > tau_a and W_kbps < tau_wl:
         headroom = cfg.budget_kbits - debt
         borrowed = min(cfg.gamma_wl * (tau_wl - W_kbps) * cfg.slot_seconds,
@@ -124,8 +129,10 @@ def init_state_jax() -> ElasticStateJax:
 
 def update_jax(cfg: ElasticConfig, state: ElasticStateJax,
                total_area: jax.Array, W_kbps: jax.Array, tau_wl: jax.Array,
-               tau_wh: jax.Array) -> Tuple[ElasticStateJax, jax.Array,
-                                           Dict[str, jax.Array]]:
+               tau_wh: jax.Array,
+               reset_debt: Optional[jax.Array] = None
+               ) -> Tuple[ElasticStateJax, jax.Array,
+                          Dict[str, jax.Array]]:
     """Traced ``update``: one slot of the controller on device scalars.
 
     Same update rule as the numpy reference (first-slot initialization,
@@ -133,26 +140,34 @@ def update_jax(cfg: ElasticConfig, state: ElasticStateJax,
     float32, so equivalence to the float64 host path is to rounding, not
     bit-exact.  Both branches are computed and selected (no host control
     flow) — this is what lets the whole control loop live inside one jitted
-    program."""
+    program.
+
+    ``reset_debt`` (traced bool scalar, None = never) clears the debt
+    BEFORE the slot's borrow/repay — the camera-reconnect clamp, see the
+    host ``update``."""
     total_area = jnp.asarray(total_area, jnp.float32)
     W_kbps = jnp.asarray(W_kbps, jnp.float32)
+
+    debt0 = state.debt_kbits
+    if reset_debt is not None:
+        debt0 = jnp.where(jnp.asarray(reset_debt), 0.0, debt0)
 
     sigma_a = jnp.sqrt(jnp.maximum(state.a_var, 1e-12))
     tau_a = state.a_ema + cfg.gamma_a * sigma_a
 
     borrow = (total_area > tau_a) & (W_kbps < tau_wl)
-    headroom = jnp.maximum(cfg.budget_kbits - state.debt_kbits, 0.0)
+    headroom = jnp.maximum(cfg.budget_kbits - debt0, 0.0)
     borrowed = jnp.where(
         borrow,
         jnp.minimum(cfg.gamma_wl * (tau_wl - W_kbps) * cfg.slot_seconds,
                     headroom),
         0.0)
-    repay = (~borrow) & (W_kbps >= tau_wh) & (state.debt_kbits > 0.0)
+    repay = (~borrow) & (W_kbps >= tau_wh) & (debt0 > 0.0)
     repaid = jnp.where(
         repay,
-        jnp.minimum(state.debt_kbits, (W_kbps - tau_wh) * cfg.slot_seconds),
+        jnp.minimum(debt0, (W_kbps - tau_wh) * cfg.slot_seconds),
         0.0)
-    debt = state.debt_kbits + borrowed - repaid
+    debt = debt0 + borrowed - repaid
 
     delta = total_area - state.a_ema
     a_ema = state.a_ema + cfg.alpha * delta

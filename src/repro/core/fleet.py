@@ -95,6 +95,39 @@ the per-slot program on dead inputs but cannot advance the key chain, the
 elastic state, the logs, or the DP capacity, which derives from the active
 prefix via ``allocation.trace_capacity``).
 
+Fault tolerance: the liveness-mask contract
+-------------------------------------------
+Camera churn / link faults are DATA, not shape: every fleet entry point
+accepts a per-slot boolean **liveness mask** (``live`` (C,) per slot,
+``faults`` (T, C) per episode, default all-True) that rides through the
+traced programs exactly like reducto's keep-flags — one executable
+signature serves faulty and fault-free runs, zero recompiles, zero extra
+transfers.  A dead (camera, slot) reuses the inert-camera contract the
+mesh padding already defines: it still COMPUTES (dead flops keep the
+program shape static) but cannot contribute — its F1/size/log entries are
+masked to zero in the slot-step, the allocators exclude it (it holds no
+bitrate; see ``allocation`` — the knapsack runs on a forced-row transform,
+fair shares split among live cameras only), the elastic controller's area
+signal drops it, and its logs read zero bytes / zero F1.  On RECONNECT a
+camera rejoins as if fresh: reducto's cross-slot reference re-seeds from
+its first frame (the per-camera ``first`` flag ORs the reconnect edge) and
+the elastic debt clamp (``elastic.update*(reset_debt=...)``) bars it from
+claiming bandwidth borrowed against a fleet it wasn't part of.  Codec keys
+are a pure per-(slot, camera) function (``slot_camera_keys``), NOT a
+fleet-size-dependent chain, so a camera dead for the whole trace is
+log-equivalent (<= 1e-5) to a fleet that never had it — the headline
+differential guarantee (tests/test_faults.py), across all methods and all
+runner modes.  Slot 0's camera (or any one camera) must stay live per slot:
+the control step needs >= 1 live camera.
+
+``checked=True`` (diagnostics lane, off by default) threads
+``jax.experimental.checkify`` user checks through the slot-step, control
+step and episode scan — finite logs, allocation <= capacity, keep-mask and
+liveness consistency, elastic debt in [0, budget] — and surfaces them via
+``checkify.check``/``err.throw()`` AFTER the transfer-guarded region.
+Unchecked programs contain no checkify code at all (the flag is a trace
+static), so the default lane's overhead is structurally zero.
+
 Mesh & donation
 ---------------
 The camera axis is the leading axis of every per-camera operand, and the
@@ -119,6 +152,7 @@ from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import checkify
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import allocation as alloc_mod
@@ -193,6 +227,30 @@ def _key_chain(key: jax.Array, n: int) -> Tuple[jax.Array, jax.Array]:
         k, sub = jax.random.split(k)
         return k, sub
     return jax.lax.scan(step, key, None, length=n)
+
+
+# domain-separation salt for the codec key stream: the scene generator folds
+# (key, t, cam) too, so without a salt a run whose codec base key equals the
+# scene key would reuse the scene's noise samples as coding noise
+CODEC_KEY_SALT = 0x0DEC
+
+
+@jax.jit
+def slot_camera_keys(key0: jax.Array, t, cam_ids) -> jax.Array:
+    """Per-(slot, camera) codec keys as a PURE function of the run key:
+    ``fold_in(fold_in(fold_in(key0, salt), t), cam_id)`` — no sequential
+    chain.  This is the property the fault contract rests on: camera i's
+    coding noise does not depend on which other cameras exist, live, or
+    die, so a fleet that never had camera j draws bit-identical samples
+    for the others as a fleet where j is dead (the dead-camera ==
+    absent-camera differential guarantee).  ``t`` is the GLOBAL scene slot
+    index (the cursor ``segment()`` stamps / the episode's ``t_idx``), so
+    resumed runs continue the same stream.  Every execution mode draws
+    through this one function."""
+    kt = jax.random.fold_in(jax.random.fold_in(key0, CODEC_KEY_SALT),
+                            jnp.asarray(t, jnp.int32))
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        kt, jnp.asarray(cam_ids, jnp.int32))
 
 
 class FleetSlotOut(NamedTuple):
@@ -270,9 +328,10 @@ def keep_selection(keep: jax.Array, F: int) -> KeepSelection:
 
 def _slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
                masks: jax.Array, b: jax.Array, r: jax.Array, keys: jax.Array,
-               keep: jax.Array, gt_boxes: jax.Array, gt_valid: jax.Array, *,
-               eval_frames: int, block_size: int, conf_thresh: float,
-               with_reuse: bool) -> FleetSlotOut:
+               keep: jax.Array, gt_boxes: jax.Array, gt_valid: jax.Array,
+               live: jax.Array, *, eval_frames: int, block_size: int,
+               conf_thresh: float, with_reuse: bool,
+               checked: bool = False) -> FleetSlotOut:
     """The traced slot step for C cameras (C local under shard_map).
 
     frames (C,N,H,W); masks (C,H/bs,W/bs) bool; b, r (C,) traced; keys
@@ -281,11 +340,16 @@ def _slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
     ALL N frames — which frames get scored is decided ON DEVICE by
     ``keep_selection`` (kept-frame eval spread, filtered-frame reuse scoring,
     per-camera arm weights), so no host-built index array ever enters the
-    program.  ``with_reuse=False`` (profiling) drops the reuse arm from the
-    program entirely — the profiling sweep's batch shape is its own
+    program.  ``live`` (C,) bool is the slot's camera liveness mask (see the
+    module docstring's fault contract): a dead or unallocated (b == 0)
+    camera still computes — dead flops, same program shape — but its
+    F1/size/host_pack entries are masked to zero, so it contributes nothing
+    observable.  ``with_reuse=False`` (profiling) drops the reuse arm from
+    the program entirely — the profiling sweep's batch shape is its own
     specialization anyway, so it skips the arm's dead detector/F1 work;
     ``run()`` always compiles with the arm so all four methods share one
-    executable.
+    executable.  ``checked`` inserts checkify invariants (trace static: the
+    default program carries no checkify code).
     """
     C, N, H, W = frames.shape
     G = gt_boxes.shape[2]
@@ -332,6 +396,23 @@ def _slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
             gv_m.reshape(C * F, G)).reshape(C, F)
         f1 = (f1 * sel.w_keep
               + jnp.sum(f1_miss * sel.miss_w, axis=1) * (1.0 - sel.w_keep))
+    # the transmit mask: dead cameras and zero-allocation slots (a hard
+    # outage leaves every camera at b == 0) send nothing — zero bytes, zero
+    # F1 — while their dead compute keeps the program shape static
+    tx = jnp.asarray(live, bool) & (b > 0.0)
+    f1 = jnp.where(tx, f1, 0.0)
+    f1_frames = jnp.where(tx[:, None], f1_frames, 0.0)
+    sizes = jnp.where(tx, sizes, 0.0)
+    if checked:
+        checkify.check(jnp.all(jnp.isfinite(f1)) & jnp.all(jnp.isfinite(sizes)),
+                       "slot-step: non-finite F1 or size")
+        checkify.check(jnp.all((f1 >= -1e-3) & (f1 <= 1.0 + 1e-3)),
+                       "slot-step: F1 outside [0, 1]")
+        checkify.check(jnp.all(sizes >= 0.0), "slot-step: negative size")
+        checkify.check(jnp.all(jnp.any(keep, axis=1)),
+                       "slot-step: keep mask row with no kept frame")
+        checkify.check(jnp.all(jnp.where(tx[:, None], True, f1_frames == 0.0)),
+                       "slot-step: non-transmitting camera produced F1")
     return FleetSlotOut(
         f1=f1, f1_frames=f1_frames, sizes=sizes,
         host_pack=jnp.stack([f1, sizes]),
@@ -352,10 +433,16 @@ def _reducto_keep_impl(frames: jax.Array, ref: jax.Array, first: jax.Array, *,
     segment), frames 1..N-1 against their predecessor.  Forced-keep rules:
     the first slot of a run keeps frame 0 (no reference exists yet), and an
     all-quiet slot keeps frame 0 so every slot transmits >= 1 frame.
-    Returns (keep (C, N) bool, new reference frames (C, H, W)); everything
-    stays on device — the pre-episode per-slot 'keep' D2H fetch is gone."""
+    ``first`` is PER-CAMERA ((C,) bool, scalar broadcasts): besides the
+    run's first slot it marks reconnect edges — a camera rejoining after a
+    fault has no valid cross-slot reference, so it re-seeds from its own
+    frame 0 exactly like a fresh run (the fault contract's "rejoin as
+    fresh" rule).  Returns (keep (C, N) bool, new reference frames
+    (C, H, W)); everything stays on device — the pre-episode per-slot
+    'keep' D2H fetch is gone."""
     N = frames.shape[1]
-    ref = jnp.where(first, frames[:, 0], ref)
+    first = jnp.broadcast_to(jnp.asarray(first, bool), (frames.shape[0],))
+    ref = jnp.where(first[:, None, None], frames[:, 0], ref)
     allf = jnp.concatenate([ref[:, None], frames], axis=1)   # (C, N+1, H, W)
     sc = em_ops._segment_motion_fleet_impl(
         allf, block_size=block_size, edge_thresh=edge_thresh, tile_rows=None,
@@ -375,17 +462,20 @@ def reducto_keep_step(frames: jax.Array, ref: jax.Array, first, *,
                       ) -> Tuple[jax.Array, jax.Array]:
     """Dispatch the traced keep decision (camera-sharded when a mesh is
     given) WITHOUT blocking: (keep, new ref) come back as device arrays that
-    feed ``fleet_slot_step`` / the next slot's keep step directly."""
+    feed ``fleet_slot_step`` / the next slot's keep step directly.
+    ``first`` may be a scalar (whole-fleet run start) or a (C,) per-camera
+    vector (run start OR reconnect edges, see ``_reducto_keep_impl``)."""
     cam = P("camera")
     fn = cached_sharded_jit(
         _reducto_keep_impl,
         dict(block_size=block_size, edge_thresh=edge_thresh,
              use_kernel=use_kernel),
-        mesh, in_specs=(cam, cam, P()), out_specs=(cam, cam))
+        mesh, in_specs=(cam, cam, cam), out_specs=(cam, cam))
     C = frames.shape[0]
     C_pad = pad_cameras(C, mesh)
+    first = jnp.broadcast_to(jnp.asarray(first, bool), (C,))
     keep, new_ref = fn(pad_leading(frames, C_pad), pad_leading(ref, C_pad),
-                       jnp.asarray(first, bool))
+                       pad_leading(first, C_pad, fill=False))
     if C_pad != C:
         keep, new_ref = keep[:C], new_ref[:C]
     return keep, new_ref
@@ -399,10 +489,11 @@ _COMPILE_COUNTS: Dict[Tuple, int] = {}
 
 def _build_executable(cache_key: Tuple, mesh: Optional[Mesh],
                       cfg: CodecConfig, eval_frames: int, block_size: int,
-                      conf_thresh: float, donate: bool, with_reuse: bool):
+                      conf_thresh: float, donate: bool, with_reuse: bool,
+                      checked: bool):
     impl = functools.partial(_slot_step, cfg, eval_frames=eval_frames,
                              block_size=block_size, conf_thresh=conf_thresh,
-                             with_reuse=with_reuse)
+                             with_reuse=with_reuse, checked=checked)
 
     def counted(*args):
         # this Python side effect runs exactly once per new jit
@@ -410,27 +501,33 @@ def _build_executable(cache_key: Tuple, mesh: Optional[Mesh],
         _COMPILE_COUNTS[cache_key] = _COMPILE_COUNTS.get(cache_key, 0) + 1
         return impl(*args)
 
+    if checked:
+        # the diagnostics lane: checkify functionalization composes with a
+        # plain jit — no mesh, no donation (the error value aliases nothing)
+        assert mesh is None, "checked mode runs unsharded (SystemConfig "\
+                             "forces shard='off')"
+        return jax.jit(checkify.checkify(counted))
     cam = P("camera")
-    in_specs = (P(),) + (cam,) * 8
+    in_specs = (P(),) + (cam,) * 9
     out_specs = FleetSlotOut(cam, cam, cam, P(None, "camera"), cam, cam, cam)
     # donate the big per-slot buffers: frames(1), gt(7,8) — positions in the
-    # (server_params, frames, masks, b, r, keys, keep, gt_boxes, gt_valid)
-    # argument list.  masks stay undonated: callers hold the ROIDet mask for
-    # the sequential-equivalence comparisons.
+    # (server_params, frames, masks, b, r, keys, keep, gt_boxes, gt_valid,
+    # live) argument list.  masks stay undonated: callers hold the ROIDet
+    # mask for the sequential-equivalence comparisons.
     donate_argnums = (1, 7, 8) if donate else ()
     return sharded_jit(counted, mesh, in_specs, out_specs, donate_argnums)
 
 
 def _get_executable(mesh: Optional[Mesh], cfg: CodecConfig, eval_frames: int,
                     block_size: int, conf_thresh: float, donate: bool,
-                    with_reuse: bool):
+                    with_reuse: bool, checked: bool):
     key = (mesh_cache_key(mesh), cfg, eval_frames, block_size, conf_thresh,
-           donate, with_reuse)
+           donate, with_reuse, checked)
     fn = _EXEC_CACHE.get(key)
     if fn is None:
         fn = _EXEC_CACHE[key] = _build_executable(
             key, mesh, cfg, eval_frames, block_size, conf_thresh, donate,
-            with_reuse)
+            with_reuse, checked)
     return fn
 
 
@@ -451,43 +548,80 @@ class ControlOut(NamedTuple):
 
 
 def _control_impl(mlp_params, jcab_util, jcab_res, lam, a, c, W_t, est,
-                  tau_wl, tau_wh, *, method: str, ecfg: ElasticConfig,
-                  bitrates: Tuple[int, ...], resolutions: Tuple[float, ...],
+                  tau_wl, tau_wh, live, reconnect, *, method: str,
+                  ecfg: ElasticConfig, bitrates: Tuple[int, ...],
+                  resolutions: Tuple[float, ...],
                   slot_seconds: float, use_elastic: bool, use_kernel: bool,
-                  w_cap: int, num_cams: int) -> ControlOut:
+                  w_cap: int, num_cams: int,
+                  checked: bool = False) -> ControlOut:
     """One traced slot of the server-side control loop (sections 5.2 + 5.3):
     elastic adjustment -> utility table -> allocation, method-routed at
     trace time.  Every input/output is a device array; the only host values
-    are the statics."""
+    are the statics.
+
+    ``live`` (C,) bool masks dead cameras out of the area signal and every
+    allocator (they hold zero bitrate, see ``allocation``'s fault contract);
+    ``reconnect`` (bool scalar) marks a slot where >= 1 camera rejoined —
+    it clears the outstanding elastic debt BEFORE the slot's borrow/repay
+    (``elastic.update_jax(reset_debt=...)``), so a rejoining camera cannot
+    claim retroactive bandwidth.  An all-live mask with reconnect=False is
+    numerically identical to the pre-fault program.  The effective capacity
+    floor is 0.0 (not bitrates[0]): a hard-outage slot (W == 0, no elastic
+    borrow) must yield the explicit all-zero infeasible allocation, not a
+    phantom minimum-bitrate grant."""
     zero = jnp.float32(0.0)
     W_t = jnp.asarray(W_t, jnp.float32)
+    live = (jnp.ones((num_cams,), bool) if live is None
+            else jnp.asarray(live, bool))
+    reconnect = (jnp.asarray(False) if reconnect is None
+                 else jnp.asarray(reconnect, bool))
     if method in ("deepstream", "deepstream_no_elastic"):
-        area = jnp.sum(jnp.asarray(a, jnp.float32))
+        area = jnp.sum(jnp.where(live, jnp.asarray(a, jnp.float32), 0.0))
         extra = zero
         if use_elastic:
             est, extra_kbits, _ = elastic_mod.update_jax(
-                ecfg, est, area, W_t, tau_wl, tau_wh)
+                ecfg, est, area, W_t, tau_wl, tau_wh, reset_debt=reconnect)
             extra = extra_kbits / slot_seconds   # Kbps-equivalent
         util, best_res = util_mod.utility_table(
             mlp_params, a, c, jnp.asarray(bitrates, jnp.float32),
             jnp.asarray(resolutions, jnp.float32), lam)
-        W_eff = jnp.maximum(W_t + extra, float(bitrates[0]))
+        cap = W_eff = jnp.maximum(W_t + extra, 0.0)
         _, b, r, _, feasible = alloc_mod.allocate_dp_jax(
             util, best_res, bitrates, W_eff, w_cap=w_cap,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, live=live)
+        if checked and use_elastic:
+            checkify.check(
+                jnp.isfinite(est.debt_kbits)
+                & (est.debt_kbits >= -1e-3)
+                & (est.debt_kbits <= ecfg.budget_kbits + 1e-3),
+                "control: elastic debt outside [0, budget]")
     elif method == "jcab":
         area = extra = zero
+        cap = W_t
         _, b, r, _, feasible = alloc_mod.allocate_dp_jax(
             jcab_util, jcab_res, bitrates, W_t, w_cap=w_cap,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, live=live)
     elif method in ("reducto", "static"):
         area = extra = zero
-        b, feasible = alloc_mod.allocate_fair_jax(bitrates, W_t, num_cams)
+        cap = W_t
+        b, feasible = alloc_mod.allocate_fair_jax(bitrates, W_t, num_cams,
+                                                  live=live)
         r = jnp.ones(num_cams, jnp.float32)
     else:
         raise ValueError(method)
     pack = jnp.stack([extra, area, jnp.sum(b),
                       jnp.asarray(feasible, jnp.float32)])
+    if checked:
+        checkify.check(jnp.any(live), "control: no live camera in slot")
+        checkify.check(jnp.isfinite(W_t) & (W_t >= 0.0),
+                       "control: bandwidth sample not finite/non-negative")
+        checkify.check(jnp.all(jnp.isfinite(b)) & jnp.all(jnp.isfinite(pack)),
+                       "control: non-finite allocation or log pack")
+        checkify.check(jnp.all(jnp.where(live, True, b == 0.0)),
+                       "control: dead camera granted bandwidth")
+        checkify.check(
+            ~jnp.asarray(feasible, bool) | (jnp.sum(b) <= cap + 1.0),
+            "control: feasible allocation exceeds slot capacity")
     return ControlOut(b=b, r=r, est=est, pack=pack)
 
 
@@ -507,23 +641,27 @@ def _get_control_executable(kind: str, **statics):
     if fn is not None:
         return fn
     impl = functools.partial(_control_impl, **statics)
+    checked = statics.get("checked", False)
     if kind == "ctrl_scan":
         def scanned(mlp_params, jcab_util, jcab_res, lam, a_tr, c_tr, W_tr,
-                    est, tau_wl, tau_wh):
+                    est, tau_wl, tau_wh, live_tr, rec_tr):
             _CTRL_COMPILE_COUNTS[key] = _CTRL_COMPILE_COUNTS.get(key, 0) + 1
             def step(carry, xs):
-                a, c, W = xs
+                a, c, W, lv, rc = xs
                 out = impl(mlp_params, jcab_util, jcab_res, lam, a, c, W,
-                           carry, tau_wl, tau_wh)
+                           carry, tau_wl, tau_wh, lv, rc)
                 return out.est, (out.b, out.r, out.pack)
-            est_f, (b, r, packs) = jax.lax.scan(step, est, (a_tr, c_tr, W_tr))
+            est_f, (b, r, packs) = jax.lax.scan(
+                step, est, (a_tr, c_tr, W_tr, live_tr, rec_tr))
             return b, r, packs, est_f
-        fn = jax.jit(scanned)
+        fn = (jax.jit(checkify.checkify(scanned)) if checked
+              else jax.jit(scanned))
     else:
         def counted(*args):
             _CTRL_COMPILE_COUNTS[key] = _CTRL_COMPILE_COUNTS.get(key, 0) + 1
             return impl(*args)
-        fn = jax.jit(counted)
+        fn = (jax.jit(checkify.checkify(counted)) if checked
+              else jax.jit(counted))
     _EXEC_CACHE[key] = fn
     return fn
 
@@ -533,24 +671,37 @@ def fleet_control_step(method: str, mlp_params, jcab_util, jcab_res, lam,
                        ecfg: ElasticConfig, bitrates: Sequence[int],
                        resolutions: Sequence[float], slot_seconds: float,
                        use_elastic: bool, use_kernel: bool, w_cap: int,
-                       num_cams: int, mesh: Optional[Mesh] = None
-                       ) -> ControlOut:
+                       num_cams: int, mesh: Optional[Mesh] = None,
+                       live: Optional[jax.Array] = None, reconnect=None,
+                       checked: bool = False) -> ControlOut:
     """Dispatch one slot of the device-resident control loop WITHOUT
     blocking: slot t's (b, r) come back as device arrays ready to feed
     ``fleet_slot_step``; callers fetch ``pack`` with the deferred log
     harvest.  ``a``/``c`` may be None for content-agnostic methods.
+    ``live``/``reconnect`` are the slot's fault signals (None = all live,
+    no reconnect — numerically identical to the pre-fault program; they are
+    traced DATA, so faulty and fault-free slots share one executable).
     Camera-sharded features are gathered onto one device at the shard
     boundary (the allocator runs outside the camera mesh)."""
     if a is not None:
         a = unshard(a, mesh)
         c = unshard(c, mesh)
+    if live is None:
+        live = jnp.ones((int(num_cams),), bool)
+    if reconnect is None:
+        reconnect = False
     fn = _get_control_executable(
         "ctrl", method=method, ecfg=ecfg, bitrates=tuple(bitrates),
         resolutions=tuple(resolutions), slot_seconds=float(slot_seconds),
         use_elastic=bool(use_elastic), use_kernel=bool(use_kernel),
-        w_cap=int(w_cap), num_cams=int(num_cams))
+        w_cap=int(w_cap), num_cams=int(num_cams), checked=bool(checked))
     out = fn(mlp_params, jcab_util, jcab_res, lam, a, c, W_t, est,
-             tau_wl, tau_wh)
+             tau_wl, tau_wh, jnp.asarray(live, bool),
+             jnp.asarray(reconnect, bool))
+    if checked:
+        err, out = out
+        with jax.transfer_guard_device_to_host("allow"):
+            err.throw()
     if mesh is not None:
         # (b, r) feed the mesh-committed slot-step; est/pack stay put (est
         # cycles back into the next control step, pack is harvest-only)
@@ -565,7 +716,9 @@ def fleet_control_scan(method: str, mlp_params, jcab_util, jcab_res, lam,
                        bitrates: Sequence[int],
                        resolutions: Sequence[float], slot_seconds: float,
                        use_elastic: bool, use_kernel: bool, w_cap: int,
-                       num_cams: int
+                       num_cams: int, live_trace: Optional[jax.Array] = None,
+                       reconnect_trace: Optional[jax.Array] = None,
+                       checked: bool = False
                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                   ElasticStateJax]:
     """``lax.scan``-over-slots variant for short traces: the WHOLE control
@@ -573,20 +726,32 @@ def fleet_control_scan(method: str, mlp_params, jcab_util, jcab_res, lam,
     assignments, (T, 4) log packs and the final elastic state — in ONE
     dispatch.  Slot-equivalent to T ``fleet_control_step`` calls; like the
     step, ``a_trace``/``c_trace`` may be None for content-agnostic methods
-    (zeros are scanned in their place — those branches never read them)."""
+    (zeros are scanned in their place — those branches never read them).
+    ``live_trace`` (T, C) / ``reconnect_trace`` (T,) are the per-slot fault
+    signals (None = all live / no reconnects)."""
     W_trace = jnp.asarray(W_trace, jnp.float32)
+    T = int(W_trace.shape[0])
     if a_trace is None:
-        a_trace = c_trace = jnp.zeros((W_trace.shape[0], int(num_cams)),
-                                      jnp.float32)
+        a_trace = c_trace = jnp.zeros((T, int(num_cams)), jnp.float32)
+    if live_trace is None:
+        live_trace = jnp.ones((T, int(num_cams)), bool)
+    if reconnect_trace is None:
+        reconnect_trace = jnp.zeros((T,), bool)
     fn = _get_control_executable(
         "ctrl_scan", method=method, ecfg=ecfg, bitrates=tuple(bitrates),
         resolutions=tuple(resolutions), slot_seconds=float(slot_seconds),
         use_elastic=bool(use_elastic), use_kernel=bool(use_kernel),
-        w_cap=int(w_cap), num_cams=int(num_cams))
-    return fn(mlp_params, jcab_util, jcab_res, lam,
-              jnp.asarray(a_trace, jnp.float32),
-              jnp.asarray(c_trace, jnp.float32), W_trace, est,
-              tau_wl, tau_wh)
+        w_cap=int(w_cap), num_cams=int(num_cams), checked=bool(checked))
+    out = fn(mlp_params, jcab_util, jcab_res, lam,
+             jnp.asarray(a_trace, jnp.float32),
+             jnp.asarray(c_trace, jnp.float32), W_trace, est,
+             tau_wl, tau_wh, jnp.asarray(live_trace, bool),
+             jnp.asarray(reconnect_trace, bool))
+    if checked:
+        err, out = out
+        with jax.transfer_guard_device_to_host("allow"):
+            err.throw()
+    return out
 
 
 def fleet_slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
@@ -594,12 +759,19 @@ def fleet_slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
                     keys: jax.Array, keep: jax.Array, gt_boxes: jax.Array,
                     gt_valid: jax.Array, *, eval_frames: int, block_size: int,
                     conf_thresh: float = 0.4, mesh: Optional[Mesh] = None,
-                    donate: bool = True, with_reuse: bool = True
+                    donate: bool = True, with_reuse: bool = True,
+                    live: Optional[jax.Array] = None, checked: bool = False
                     ) -> FleetSlotOut:
     """Dispatch the unified slot-step; pads C to the mesh size and slices
     the padding back off.  Returns device arrays WITHOUT blocking — callers
-    fetch ``host_pack`` (one packed transfer) when they need the scalars."""
+    fetch ``host_pack`` (one packed transfer) when they need the scalars.
+    ``live`` is the slot's (C,) camera liveness mask (None = all live);
+    mesh-padding cameras are marked dead.  ``checked=True`` routes through
+    the checkify-instrumented executable and raises on any violated
+    invariant (a blocking D2H of the error flag — diagnostics lane only)."""
     C = frames.shape[0]
+    if live is None:
+        live = jnp.ones((C,), bool)
     C_pad = pad_cameras(C, mesh)
     if C_pad != C:
         frames = pad_leading(frames, C_pad)
@@ -610,8 +782,9 @@ def fleet_slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
         keep = pad_leading(keep, C_pad, fill=True)
         gt_boxes = pad_leading(gt_boxes, C_pad)
         gt_valid = pad_leading(gt_valid, C_pad)
+        live = pad_leading(jnp.asarray(live, bool), C_pad, fill=False)
     fn = _get_executable(mesh, cfg, eval_frames, block_size, conf_thresh,
-                         donate, with_reuse)
+                         donate and not checked, with_reuse, checked)
     with warnings.catch_warnings():
         # donated frame/GT buffers can't alias the (small) outputs; XLA still
         # recycles them for intermediates, which is the point — drop the nag
@@ -619,7 +792,11 @@ def fleet_slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
         warnings.filterwarnings("ignore",
                                 message=".*donated buffers were not usable.*")
         out = fn(server_params, frames, masks, b, r, keys, keep, gt_boxes,
-                 gt_valid)
+                 gt_valid, jnp.asarray(live, bool))
+    if checked:
+        err, out = out
+        with jax.transfer_guard_device_to_host("allow"):
+            err.throw()
     if C_pad != C:
         out = FleetSlotOut(
             f1=out.f1[:C], f1_frames=out.f1_frames[:C], sizes=out.sizes[:C],
@@ -633,7 +810,8 @@ def fleet_slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
 class EpisodeOut(NamedTuple):
     packs: jax.Array       # (T, 2, C) stacked [f1; sizes] per slot
     cpacks: jax.Array      # (T, 4) [extra, area, alloc_kbps, feasible]
-    key: jax.Array         # final codec PRNG key (threads into the next run)
+    key: jax.Array         # the run key, unchanged (codec keys are a pure
+                           # per-(slot, camera) fold — see slot_camera_keys)
     est: ElasticStateJax   # final elastic state
 
 
@@ -648,29 +826,41 @@ def episode_compile_count() -> int:
 
 def _episode_impl(server_params, light_params, mlp_params, jcab_util,
                   jcab_res, lam, scene_params: DeviceSceneParams,
-                  trace, t_idx, t_first, t_len, key0, skey, tau_wl, tau_wh,
+                  trace, live_tr, t_idx, t_first, t_len, key0, skey,
+                  tau_wl, tau_wh,
                   est0: ElasticStateJax, ref0, *, method: str,
                   scfg: SceneConfig, ccfg: CodecConfig, ecfg: ElasticConfig,
                   bitrates: Tuple[int, ...], resolutions: Tuple[float, ...],
                   use_elastic: bool, use_kernel: bool, w_cap: int,
                   num_cams: int, c_pad: int, eval_frames: int,
                   block_size: int, conf_thresh: float, gt_pad: int,
-                  sharded: bool) -> EpisodeOut:
+                  sharded: bool, checked: bool = False) -> EpisodeOut:
     """One whole bandwidth trace as ONE traced program (runs per-device
     under shard_map when ``sharded``): ``lax.scan`` of segment-gen ->
     ROIDet -> control -> keep -> slot-step over the (T,) trace.  Carry:
-    codec PRNG key + ``ElasticStateJax`` + reducto's cross-slot reference
-    frames.  Logs are STACKED on device and harvested once by the caller —
-    nothing inside the scan ever touches the host.
+    ``ElasticStateJax`` + reducto's cross-slot reference frames + the
+    previous slot's liveness row (codec keys are a pure per-(slot, camera)
+    fold — ``slot_camera_keys`` — so no key chain is carried).  Logs are
+    STACKED on device and harvested once by the caller — nothing inside the
+    scan ever touches the host.
+
+    ``live_tr`` (T_b, num_cams) bool is the scanned liveness mask (fault
+    families or all-True): dead cameras are masked out of the area signal,
+    the allocators and the slot logs; a reconnect edge
+    (``live & ~live_prev``) resets that camera's reducto reference and
+    clears the fleet's elastic debt — the module docstring's fault
+    contract, traced end to end with zero extra transfers.  The previous
+    liveness row is seeded all-True, so a resumed run treats slot-0 liveness
+    as steady state (no spurious reconnect).
 
     Bucketed traces: the scanned (T_b,) operands may be PADDED past the
     active prefix (``t_len`` slots) up to a trace-length bucket.  Padded
     slots run the full per-slot program on dead inputs, but the returned
-    codec key and elastic state are gathered from the stacked carry at slot
-    ``t_len - 1`` — the padding can never advance the key chain or the
-    controller, and the caller slices the stacked logs back to ``t_len``.
-    (The reducto reference a padded slot writes is dead too: padding sits
-    after every active slot and the reference resets per run.)
+    elastic state is gathered from the stacked carry at slot ``t_len - 1``
+    — the padding can never advance the controller, and the caller slices
+    the stacked logs back to ``t_len``.  (The reducto reference a padded
+    slot writes is dead too: padding sits after every active slot and the
+    reference resets per run.)
 
     Sharding: everything per-camera runs on the local camera shard; the
     control step is the one cross-camera stage, so its (a, c) features are
@@ -680,6 +870,9 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
     slicing its own cameras' (b, r) back out."""
     N, H, W = scfg.frames_per_segment, scfg.height, scfg.width
     n_local = scene_params.backgrounds.shape[0]   # == c_pad / D under shard_map
+    if checked:
+        checkify.check(jnp.all(jnp.isfinite(trace)),
+                       "episode: non-finite bandwidth trace")
 
     def gather(x):
         """local (n_local,) -> global (num_cams,) — mesh padding dropped."""
@@ -698,20 +891,25 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
         return jax.lax.dynamic_slice_in_dim(x, i * n_local, n_local, 0)
 
     def step(carry, xs):
-        key, est, ref = carry
-        t, W_t = xs
+        est, ref, live_prev = carry
+        t, W_t, live_t = xs
         frames, gtb, gtv = synth_mod.segments_device(
             scfg, scene_params, skey, t, gt_pad=gt_pad)
-        key, keys_g = _key_chain(key, num_cams)           # replicated chain
-        keys_l = scatter(keys_g, 0)
+        keys_l = slot_camera_keys(key0, t, scene_params.cam_ids)
+        reconnect_g = live_t & ~live_prev            # (num_cams,) global
+        live_l = scatter(live_t, False)
         a = c = None
         if method in ("deepstream", "deepstream_no_elastic"):
+            # bounded_cc: checkify cannot functionalize the labeler's
+            # batched-predicate while-loop, so the checked episode swaps it
+            # for the fixed-sweep fori variant (identical fixpoint)
             roi = roidet_mod._roidet_fleet_impl(
                 frames, light_params, block_size=block_size,
                 motion_thresh=roidet_mod.MOTION_THRESH,
                 edge_thresh=roidet_mod.EDGE_THRESH,
                 conf_thresh=roidet_mod.CONF_THRESH,
-                use_kernel=use_kernel, max_boxes=roidet_mod.MAX_BOXES)
+                use_kernel=use_kernel, max_boxes=roidet_mod.MAX_BOXES,
+                bounded_cc=checked)
             masks = roi.mask
             a, c = gather(roi.area_ratio), gather(roi.confidence)
         else:
@@ -719,36 +917,41 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
                              bool)
         co = _control_impl(
             mlp_params, jcab_util, jcab_res, lam, a, c, W_t, est,
-            tau_wl, tau_wh, method=method, ecfg=ecfg, bitrates=bitrates,
+            tau_wl, tau_wh, live_t, jnp.any(reconnect_g), method=method,
+            ecfg=ecfg, bitrates=bitrates,
             resolutions=resolutions, slot_seconds=ccfg.slot_seconds,
             use_elastic=use_elastic, use_kernel=False, w_cap=w_cap,
-            num_cams=num_cams)
+            num_cams=num_cams, checked=checked)
         b_l, r_l = scatter(co.b, 1.0), scatter(co.r, 1.0)
         if method == "reducto":
             # "first slot" is per-RUN (t == t_first), matching the pipelined
             # loop's per-run reference reset — a resumed episode
             # (t_start > 0 on a reused scene) force-keeps frame 0 of ITS
-            # first slot, not of global slot 0
+            # first slot, not of global slot 0; a reconnecting camera is
+            # per-camera "first" too (its reference went stale while dead)
+            first = (jnp.broadcast_to(t == t_first, (n_local,))
+                     | scatter(reconnect_g, False))
             keep, ref = _reducto_keep_impl(
-                frames, ref, t == t_first, block_size=block_size,
+                frames, ref, first, block_size=block_size,
                 edge_thresh=roidet_mod.EDGE_THRESH, use_kernel=use_kernel)
         else:
             keep = jnp.ones((n_local, N), bool)
         out = _slot_step(ccfg, server_params, frames, masks, b_l, r_l,
-                         keys_l, keep, gtb, gtv, eval_frames=eval_frames,
+                         keys_l, keep, gtb, gtv, live_l,
+                         eval_frames=eval_frames,
                          block_size=block_size, conf_thresh=conf_thresh,
-                         with_reuse=True)
-        # the post-slot (key, est) carry is ALSO stacked so a bucketed trace
-        # can hand back the last ACTIVE slot's state instead of the carry a
+                         with_reuse=True, checked=checked)
+        # the post-slot est carry is ALSO stacked so a bucketed trace can
+        # hand back the last ACTIVE slot's state instead of the carry a
         # padded tail would have advanced
-        return (key, co.est, ref), (out.host_pack, co.pack, key, co.est)
+        return (co.est, ref, live_t), (out.host_pack, co.pack, co.est)
 
-    _, (packs, cpacks, keys_st, est_st) = jax.lax.scan(
-        step, (key0, est0, ref0), (t_idx, trace))
+    live_prev0 = jnp.ones((num_cams,), bool)
+    _, (packs, cpacks, est_st) = jax.lax.scan(
+        step, (est0, ref0, live_prev0), (t_idx, trace, live_tr))
     last = jnp.maximum(jnp.asarray(t_len, jnp.int32) - 1, 0)
-    key = keys_st[last]
     est = jax.tree.map(lambda x: x[last], est_st)
-    return EpisodeOut(packs=packs, cpacks=cpacks, key=key, est=est)
+    return EpisodeOut(packs=packs, cpacks=cpacks, key=key0, est=est)
 
 
 def _get_episode_executable(mesh: Optional[Mesh], **statics):
@@ -762,12 +965,17 @@ def _get_episode_executable(mesh: Optional[Mesh], **statics):
         _EPISODE_COMPILE_COUNTS[key] = _EPISODE_COMPILE_COUNTS.get(key, 0) + 1
         return impl(*args)
 
+    if statics.get("checked"):
+        assert mesh is None, "checked episodes run unsharded"
+        fn = _EXEC_CACHE[key] = jax.jit(checkify.checkify(counted))
+        return fn
     cam = P("camera")
     # (server, light, mlp, jcab_util, jcab_res, lam) replicated (P() is a
     # pytree prefix, so it covers whole param trees); scene params carry
-    # their own per-field specs; carries/trace replicated; ref0 sharded
+    # their own per-field specs; carries/trace/liveness replicated; ref0
+    # sharded
     in_specs = (P(), P(), P(), P(), P(), P(), DeviceSceneParams.pspecs(),
-                P(), P(), P(), P(), P(), P(), P(), P(), P(), cam)
+                P(), P(), P(), P(), P(), P(), P(), P(), P(), P(), cam)
     out_specs = EpisodeOut(P(None, None, "camera"), P(), P(), P())
     fn = _EXEC_CACHE[key] = sharded_jit(counted, mesh, in_specs, out_specs)
     return fn
@@ -784,9 +992,19 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
                   eval_frames: int, block_size: int, use_kernel: bool = True,
                   conf_thresh: float = 0.4, gt_pad: int = 16,
                   t_start: int = 0, mesh: Optional[Mesh] = None,
-                  buckets: Optional[Sequence[int]] = EPISODE_BUCKETS
+                  buckets: Optional[Sequence[int]] = EPISODE_BUCKETS,
+                  faults: Optional[np.ndarray] = None, checked: bool = False
                   ) -> EpisodeOut:
     """Dispatch a WHOLE bandwidth trace as one compiled episode.
+
+    ``faults`` is the optional (T, C) bool liveness mask (True = live;
+    None = all live).  It is ALWAYS scanned — as an all-True array when no
+    faults are injected — so faulty and fault-free episodes share one
+    executable signature: fault injection costs zero recompiles and zero
+    extra per-slot transfers.  Bucketing pads the mask's tail with
+    all-live rows (padded slots are discarded anyway).  ``checked=True``
+    dispatches the checkify-instrumented executable (unsharded) and throws
+    any violated invariant AFTER the transfer-guarded region.
 
     Every argument must already be device-resident (the scheduler's
     ``run_episode`` prepares them before its timed region); this wrapper
@@ -823,6 +1041,21 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
     scene_cfg = _dc.replace(scene_cfg, seed=0)
     T = int(trace.shape[0])
     T_b = bucket_len(T, buckets)
+    if faults is None:
+        live_np = np.ones((T_b, num_cams), bool)
+    else:
+        live_np = np.asarray(faults, bool)
+        if live_np.shape != (T, num_cams):
+            raise ValueError(
+                f"faults mask must be (T={T}, C={num_cams}) bool, got "
+                f"{live_np.shape}")
+        if not live_np.any(axis=1).all():
+            raise ValueError("faults mask leaves a slot with zero live "
+                             "cameras — the control step needs >= 1")
+        if T_b != T:
+            live_np = np.concatenate(
+                [live_np, np.ones((T_b - T, num_cams), bool)])
+    live_tr = jnp.asarray(live_np)
     if T_b != T:
         # zero-Kbps tail: padded slots run (and are discarded); zeros keep
         # the traced DP's capacity clamp trivially satisfied there
@@ -843,7 +1076,7 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
         w_cap=int(w_cap), num_cams=int(num_cams), c_pad=int(C_pad),
         eval_frames=int(eval_frames), block_size=int(block_size),
         conf_thresh=float(conf_thresh), gt_pad=int(gt_pad),
-        sharded=mesh is not None)
+        sharded=mesh is not None, checked=bool(checked))
     # slot indices continue from the scene's cursor (t_start) — data values,
     # not statics, so resumed episodes reuse the same executable; t_first
     # marks this RUN's first slot (reducto's reference-reset rule) and
@@ -865,20 +1098,28 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
             for x, s in zip(scene_params, DeviceSceneParams.pspecs())))
         ref0 = jax.device_put(ref0, cam_sh)
         (server_params, light_params, mlp_params, jcab_util, jcab_res, lam,
-         trace, t_idx, t_first, t_len, key0, skey, tau_wl, tau_wh,
+         trace, live_tr, t_idx, t_first, t_len, key0, skey, tau_wl, tau_wh,
          est0) = rep(
             (server_params, light_params, mlp_params, jcab_util, jcab_res,
-             lam, trace, t_idx, t_first, t_len, key0, skey, tau_wl, tau_wh,
-             est0))
+             lam, trace, live_tr, t_idx, t_first, t_len, key0, skey, tau_wl,
+             tau_wh, est0))
     # the timed episode proper: everything is device-resident by now, so the
     # whole T-slot trace executes under the transfer guard in BOTH
     # directions with NO scoped exemptions — any per-slot upload or fetch
     # would trip it (the zero-H2D/zero-D2H acceptance check)
+    err = None
     with jax.transfer_guard("disallow"):
         out = fn(server_params, light_params, mlp_params, jcab_util,
-                 jcab_res, lam, scene_params, trace, t_idx, t_first, t_len,
-                 key0, skey, tau_wl, tau_wh, est0, ref0)
+                 jcab_res, lam, scene_params, trace, live_tr, t_idx, t_first,
+                 t_len, key0, skey, tau_wl, tau_wh, est0, ref0)
+        if checked:
+            err, out = out
         jax.block_until_ready(out.packs)
+    if err is not None:
+        # the invariant verdict is fetched AFTER the guarded region — the
+        # checked lane keeps the zero-per-slot-transfer structure intact
+        with jax.transfer_guard_device_to_host("allow"):
+            err.throw()
     if T_b != T:
         # harvested logs are the ACTIVE prefix only — the padded tail never
         # reaches the host

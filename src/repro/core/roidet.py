@@ -69,14 +69,16 @@ def _boxes_to_mask(boxes: jax.Array, valid: jax.Array, M: int, N: int,
 
 
 def _roi_union(D: jax.Array, dboxes: jax.Array, dvalid: jax.Array, M: int,
-               N: int, block_size: int, max_boxes: int):
+               N: int, block_size: int, max_boxes: int,
+               bounded_cc: bool = False):
     """One camera's ROI tail (Alg.1 l.11-12), shared by the single-camera and
     fleet paths: connected components of the motion matrix, union with the
     detector boxes, one-block dilation (box-boundary pixels carry the
     object's edges — without the halo, cropped encodes clip object borders
     and detection recall drops at high bitrates).
     Returns (mask, area_ratio, motion_boxes, motion_valid)."""
-    mboxes, mvalid, _ = cc.label_and_boxes(D, max_boxes=max_boxes)
+    mboxes, mvalid, _ = cc.label_and_boxes(D, max_boxes=max_boxes,
+                                           bounded=bounded_cc)
     motion_mask = _boxes_to_mask(mboxes, mvalid, M, N, scale=1.0)
     det_mask = _boxes_to_mask(dboxes, dvalid, M, N, scale=1.0 / block_size)
     mask = motion_mask | det_mask
@@ -127,7 +129,7 @@ def roidet(frames: jax.Array, det_params: Any, *, block_size: int = 8,
 def _roidet_fleet_impl(frames: jax.Array, det_params: Any, *, block_size: int,
                        motion_thresh: float, edge_thresh: float,
                        conf_thresh: float, use_kernel: bool,
-                       max_boxes: int) -> ROIResult:
+                       max_boxes: int, bounded_cc: bool = False) -> ROIResult:
     C, N_f, H, W = frames.shape
     M, N = H // block_size, W // block_size
 
@@ -149,7 +151,8 @@ def _roidet_fleet_impl(frames: jax.Array, det_params: Any, *, block_size: int,
 
     mask, area, mboxes, mvalid = jax.vmap(
         lambda D_i, db_i, dv_i: _roi_union(D_i, db_i, dv_i, M, N,
-                                           block_size, max_boxes)
+                                           block_size, max_boxes,
+                                           bounded_cc=bounded_cc)
     )(D, dboxes, dvalid)
     return ROIResult(mask=mask, area_ratio=area, confidence=conf,
                      motion_boxes=mboxes, motion_valid=mvalid,

@@ -56,6 +56,21 @@ Baselines (section 7.2):
                content-AGNOSTIC profiled utility (no ROI cropping, no (a,c));
   * static   — fixed equal share;
   * deepstream_no_elastic — ablation of section 5.3.
+
+Fault tolerance: ``run(..., faults=)`` takes a (T, C) bool liveness mask
+(``data.scenarios.make_faults`` families: camera_churn, camera_flap,
+sensor_corrupt, ...) threaded through the batched and episode runners as
+traced data — a dead (camera, slot) transmits nothing, is excluded from
+every allocator and the elastic area signal, and rejoins as fresh
+(reducto reference re-seed + elastic debt clamp) — see ``core.fleet``'s
+liveness-mask contract.  The mask mirrors the padded-slot contract: a
+dead camera still COMPUTES (one executable signature, zero recompiles,
+zero extra transfers) but cannot advance any observable state, and a
+camera dead for a whole trace is log-equivalent to a fleet that never had
+it.  ``SystemConfig.checked`` turns on checkify-guarded invariants
+(diagnostics lane), and ``EpisodeSupervisor`` wraps episode dispatch with
+the ``ft.watchdog`` straggler gate, bounded retries and degraded-mode
+fallback.
 """
 from __future__ import annotations
 
@@ -76,6 +91,7 @@ from repro.core import utility as util_mod
 from repro.core.codec import CodecConfig
 from repro.core.elastic import ElasticConfig, ElasticState
 from repro.data.synthetic import DeviceScene, MultiCameraScene, SceneConfig
+from repro.ft import watchdog as ft_watchdog
 from repro.kernels.edge_motion import ops as em_ops
 from repro.models import detector as det
 from repro.sharding import rules as shard_rules
@@ -132,8 +148,11 @@ def _motion_keep(score_sums: np.ndarray, first: bool) -> np.ndarray:
     return keep
 
 
-# the fleet paths and the per-camera host loop share ONE key-split chain so
-# every execution mode draws identical coding-noise samples
+# the profiling sweep still draws from ONE key-split chain (its batched and
+# sequential arms must match sample-for-sample); the RUN loops switched to
+# ``fleet.slot_camera_keys`` fold-in keys — per-(slot, camera), fleet-size
+# independent — so every execution mode draws identical coding noise AND a
+# camera's noise stream survives adding/removing/killing other cameras
 _key_chain = fleet_mod._key_chain
 
 
@@ -163,10 +182,22 @@ class SystemConfig:
     # programs (w_cap is a jit static).  The scenario harness pins it so a
     # whole (method x family x T) matrix shares executables.
     w_cap_kbps: Optional[float] = None
+    # checkify-guarded invariants (finite logs, allocation <= capacity,
+    # liveness/keep consistency, elastic debt bounds) — the DIAGNOSTICS
+    # lane, off by default.  When off, the compiled programs contain no
+    # checkify code at all (the flag is a trace static), so the overhead of
+    # having the feature is structurally zero.  When on, runs are forced
+    # unsharded/undonated/kernel-free (checkify functionalization composes
+    # with plain jit; pallas calls have no checkify rule).
+    checked: bool = False
 
     def __post_init__(self):
         if self.alloc not in ("device", "host"):
             raise ValueError(f"alloc must be 'device' or 'host': {self.alloc!r}")
+        if self.checked:
+            self.shard = "off"
+            self.donate = False
+            self.use_kernels = False
         if self.episode:
             # the episode scan IS the device control loop — there is no
             # host-alloc variant of a program the host never re-enters
@@ -257,9 +288,11 @@ class DeepStreamSystem:
         return float(np.mean(f1s))
 
     def encode_eval(self, frames: np.ndarray, gt: List[List[Tuple]],
-                    mask: Optional[jax.Array], b: float, r: float
-                    ) -> Tuple[float, float]:
+                    mask: Optional[jax.Array], b: float, r: float,
+                    key: Optional[jax.Array] = None) -> Tuple[float, float]:
         """Encode one camera's segment (optionally ROI-masked) and score F1.
+        ``key`` pins the coding-noise key (the sequential run loop passes
+        fold-in per-(slot, camera) keys; profiling keeps the split chain).
         Returns (f1, size_bytes)."""
         fr = jnp.asarray(frames)
         H, W = fr.shape[-2:]
@@ -273,7 +306,7 @@ class DeepStreamSystem:
         t0 = time.perf_counter()
         decoded, size = codec_mod.encode_segment(
             self.cfg.codec, fr, jnp.float32(roi_pixels), jnp.float32(b),
-            jnp.float32(r), self._nextkey())
+            jnp.float32(r), self._nextkey() if key is None else key)
         jax.block_until_ready(decoded)
         self._t("compress", t0)
         f1 = self.detect_f1(decoded, gt)
@@ -284,7 +317,9 @@ class DeepStreamSystem:
     def _slot_dispatch(self, frames, gts, masks, b: np.ndarray, r: np.ndarray,
                        *, keys=None, keep: Optional[jax.Array] = None,
                        gt_dev: Optional[Tuple[jax.Array, jax.Array]] = None,
-                       with_reuse: bool = True) -> fleet_mod.FleetSlotOut:
+                       with_reuse: bool = True,
+                       live: Optional[jax.Array] = None
+                       ) -> fleet_mod.FleetSlotOut:
         """Dispatch the unified fleet slot-step WITHOUT blocking.
 
         frames (C,N,H,W); gts[cam][frame] GT lists (ignored when ``gt_dev``
@@ -316,7 +351,8 @@ class DeepStreamSystem:
             jnp.asarray(r, jnp.float32), keys, keep,
             jnp.asarray(gt_boxes), jnp.asarray(gt_valid),
             eval_frames=self.cfg.eval_frames, block_size=self.cfg.block_size,
-            mesh=self.mesh, donate=self.cfg.donate, with_reuse=with_reuse)
+            mesh=self.mesh, donate=self.cfg.donate, with_reuse=with_reuse,
+            live=live, checked=self.cfg.checked)
         self._t("fleet", t0)
         return out
 
@@ -448,19 +484,25 @@ class DeepStreamSystem:
         return float(np.mean([det.f1_score(boxes, valid, gts_missed[j])
                               for j in sel]))
 
-    def _reducto_keep(self, frames: jax.Array, t: int
+    def _reducto_keep(self, frames: jax.Array, t: int,
+                      reconnect: Optional[np.ndarray] = None
                       ) -> Tuple[jax.Array, None]:
         """Traced reducto keep decision for the batched loop: motion ->
         keep-flags -> next-slot reference, ONE device dispatch with ZERO
         host fetches (the pre-episode per-slot 'keep' D2H sync is gone —
         kept/missed frame selection happens inside the slot-step program
         via ``fleet.keep_selection``).  The cross-slot reference (last kept
-        frame) is threaded through ``self._reducto_ref``."""
+        frame) is threaded through ``self._reducto_ref``; ``reconnect``
+        (C,) bool marks cameras whose reference went stale while dead —
+        they re-seed from frame 0 like a run start."""
         C, H, W = frames.shape[0], frames.shape[2], frames.shape[3]
         if self._reducto_ref is None:
             self._reducto_ref = jnp.zeros((C, H, W), jnp.float32)
+        first = np.full(C, t == 0)
+        if reconnect is not None:
+            first = first | np.asarray(reconnect, bool)
         keep, self._reducto_ref = fleet_mod.reducto_keep_step(
-            frames, self._reducto_ref, t == 0,
+            frames, self._reducto_ref, first,
             block_size=self.cfg.block_size, use_kernel=self.cfg.use_kernels,
             mesh=self.mesh)
         return keep, None
@@ -482,19 +524,39 @@ class DeepStreamSystem:
         return util, best_res
 
     def run(self, scene: MultiCameraScene, trace_kbps: np.ndarray,
-            method: str = "deepstream", use_elastic: Optional[bool] = None
-            ) -> Dict[str, np.ndarray]:
+            method: str = "deepstream", use_elastic: Optional[bool] = None,
+            faults: Optional[np.ndarray] = None) -> Dict[str, np.ndarray]:
+        """One bandwidth trace.  ``faults`` is an optional (T, C) bool
+        liveness mask (True = camera live that slot; see
+        ``data.scenarios.make_faults``), honored by the batched and episode
+        runners; the sequential reference loop predates the fault contract
+        and rejects it."""
         if use_elastic is None:
             use_elastic = method == "deepstream"
+        if faults is not None:
+            faults = np.asarray(faults, bool)
+            T, C = len(trace_kbps), self.cfg.scene.num_cameras
+            if faults.shape != (T, C):
+                raise ValueError(f"faults mask must be (T={T}, C={C}), got "
+                                 f"{faults.shape}")
+            if not faults.any(axis=1).all():
+                raise ValueError("faults mask leaves a slot with zero live "
+                                 "cameras")
         if self.cfg.episode:
-            return self.run_episode(scene, trace_kbps, method, use_elastic)
+            return self.run_episode(scene, trace_kbps, method, use_elastic,
+                                    faults=faults)
         if self.cfg.batched:
-            return self._run_batched(scene, trace_kbps, method, use_elastic)
+            return self._run_batched(scene, trace_kbps, method, use_elastic,
+                                     faults=faults)
+        if faults is not None:
+            raise NotImplementedError("fault injection needs the batched or "
+                                      "episode runner (batched=True)")
         return self._run_sequential(scene, trace_kbps, method, use_elastic)
 
     def run_episode(self, scene: DeviceScene, trace_kbps: np.ndarray,
                     method: str = "deepstream",
-                    use_elastic: Optional[bool] = None
+                    use_elastic: Optional[bool] = None,
+                    faults: Optional[np.ndarray] = None
                     ) -> Dict[str, np.ndarray]:
         """Whole-trace device-resident episode: one ``fleet_episode``
         dispatch covers every slot (segment generation included — ``scene``
@@ -540,7 +602,8 @@ class DeepStreamSystem:
             eval_frames=self.cfg.eval_frames, block_size=self.cfg.block_size,
             use_kernel=self.cfg.use_kernels, gt_pad=self._G,
             t_start=scene._t, mesh=self.mesh,
-            buckets=self.cfg.episode_buckets)
+            buckets=self.cfg.episode_buckets, faults=faults,
+            checked=self.cfg.checked)
         self._t("episode", t0)
         # advance the scene cursor exactly like T pipelined segment() calls
         # would — a reused scene continues, matching the pipelined reference
@@ -564,17 +627,26 @@ class DeepStreamSystem:
         }
 
     def _slot_allocation(self, method: str, frames: np.ndarray, W_t: float,
-                         est: ElasticState, use_elastic: bool
+                         est: ElasticState, use_elastic: bool,
+                         live: Optional[np.ndarray] = None,
+                         reconnect: bool = False
                          ) -> Tuple[np.ndarray, np.ndarray,
                                     Optional[jax.Array], float, float, float,
                                     ElasticState]:
         """Per-slot method routing shared by both execution modes: content
         features (deepstream only) -> elastic -> allocation.
-        Returns (b, r, masks, extra, area, alloc_kbps, est)."""
+        ``live`` (C,) bool masks dead cameras out of the area signal and
+        every allocator; ``reconnect`` clears the elastic debt before the
+        slot (the camera-rejoin clamp) — the numpy mirror of the traced
+        ``fleet._control_impl`` fault contract.  The effective-capacity
+        floor is 0.0 (a hard-outage slot allocates nothing), not
+        bitrates[0].  Returns (b, r, masks, extra, area, alloc_kbps, est)."""
         cfgc = self.cfg.codec
         lam = self.cfg.lam()
         C = self.cfg.scene.num_cameras
         bitrates = list(cfgc.bitrates_kbps)
+        if live is None:
+            live = np.ones(C, bool)
         masks = None
         extra = area = 0.0
 
@@ -585,18 +657,19 @@ class DeepStreamSystem:
             # transfer-guard exempt)
             ac = _d2h(jnp.stack([roi.area_ratio, roi.confidence]), "control")
             a, c = ac[0], ac[1]
-            area = float(a.sum())
+            area = float(a[live].sum())
             if use_elastic:
                 est, extra_kbits, _ = elastic_mod.update(
                     self.cfg.elastic, est, area, W_t,
-                    self.tau_wl, self.tau_wh)
+                    self.tau_wl, self.tau_wh, reset_debt=bool(reconnect))
                 extra = extra_kbits / cfgc.slot_seconds   # Kbps-equivalent
             t0 = time.perf_counter()
             util, best_res = alloc.build_utility_table(
                 self.mlp, a, c, bitrates, cfgc.resolutions, lam)
             al = alloc.allocate_dp(util, best_res, bitrates,
-                                   max(W_t + extra, bitrates[0]),
-                                   use_kernel=self.cfg.use_kernels)
+                                   max(W_t + extra, 0.0),
+                                   use_kernel=self.cfg.use_kernels,
+                                   live=live)
             self._t("alloc", t0)
             b, r = al.bitrates_kbps, al.resolutions
             masks = roi.mask
@@ -605,12 +678,13 @@ class DeepStreamSystem:
         elif method == "jcab":
             util, best_res = self._jcab_utility_table()
             al = alloc.allocate_dp(util, best_res, bitrates, W_t,
-                                   use_kernel=self.cfg.use_kernels)
+                                   use_kernel=self.cfg.use_kernels,
+                                   live=live)
             b, r = al.bitrates_kbps, al.resolutions
             alloc_kbps = float(al.bitrates_kbps.sum())
 
         elif method in ("reducto", "static"):
-            al = alloc.allocate_fair(bitrates, W_t, C)
+            al = alloc.allocate_fair(bitrates, W_t, C, live=live)
             b, r = al.bitrates_kbps, al.resolutions
             alloc_kbps = float(al.bitrates_kbps.sum())
         else:
@@ -651,13 +725,18 @@ class DeepStreamSystem:
         return ctx
 
     def _slot_control_device(self, method: str, frames: jax.Array, t: int,
-                             ctx: Dict[str, Any], use_elastic: bool
+                             ctx: Dict[str, Any], use_elastic: bool,
+                             live: Optional[np.ndarray] = None,
+                             reconnect: bool = False
                              ) -> Tuple[jax.Array, jax.Array,
                                         Optional[jax.Array], jax.Array]:
         """Per-slot method routing, device-resident: ROIDet's (a, c) device
         vectors feed the traced elastic -> allocation program directly —
-        no host fetch anywhere.  Returns (b, r, masks, ctrl_pack), all
-        device arrays; the elastic state is threaded through ``ctx``."""
+        no host fetch anywhere.  ``live``/``reconnect`` are the slot's
+        fault signals (traced data: no recompile, and their upload is H2D —
+        the loop's zero-D2H guarantee is untouched).  Returns
+        (b, r, masks, ctrl_pack), all device arrays; the elastic state is
+        threaded through ``ctx``."""
         a = c = masks = None
         if method in ("deepstream", "deepstream_no_elastic"):
             roi = self.camera_features(frames, block=False)
@@ -680,20 +759,26 @@ class DeepStreamSystem:
             slot_seconds=self.cfg.codec.slot_seconds,
             use_elastic=use_elastic, use_kernel=self.cfg.use_kernels,
             w_cap=ctx["w_cap"], num_cams=self.cfg.scene.num_cameras,
-            mesh=self.mesh)
+            mesh=self.mesh,
+            live=None if live is None else jnp.asarray(live, bool),
+            reconnect=bool(reconnect), checked=self.cfg.checked)
         ctx["est"] = co.est
         self._t("ctrl", t0)
         return co.b, co.r, masks, co.pack
 
     def _run_batched(self, scene: MultiCameraScene, trace_kbps: np.ndarray,
-                     method: str, use_elastic: bool) -> Dict[str, np.ndarray]:
+                     method: str, use_elastic: bool,
+                     faults: Optional[np.ndarray] = None
+                     ) -> Dict[str, np.ndarray]:
         """Pipelined fleet loop: every method routes through ONE compiled
         slot-step.  With ``alloc="device"`` the control loop runs on device
         too — the host only harvests slot t's packed (F1, sizes) + control
         logs while slot t+1 is in flight (those fetches are scoped
         transfer-guard exemptions; everything else is D2H-free).  With
         ``alloc="host"`` the numpy reference control path syncs on one
-        packed (a, c) fetch per slot."""
+        packed (a, c) fetch per slot.  ``faults`` (T, C) bool threads the
+        liveness mask through control, keep-flags and the slot-step as
+        traced data (same executables, no extra D2H)."""
         lam = self.cfg.lam()
         C = self.cfg.scene.num_cameras
         device_ctrl = self.cfg.alloc == "device"
@@ -722,6 +807,7 @@ class DeepStreamSystem:
                 logs["alloc_kbps"].append(float(cp[2]))
 
         self._reducto_ref = None
+        live_prev = np.ones(C, bool)
         pending: Optional[Tuple] = None
         for t in range(len(trace_kbps)):
             W_t = float(trace_kbps[t])
@@ -736,24 +822,39 @@ class DeepStreamSystem:
             # slot uploads a fresh segment.  DeviceScene segments are already
             # device-resident (incl. padded GT) — zero uploads.
             frames = jnp.asarray(seg["frames"])
-            keys = self._keys(C)
+            # fleet-size-independent per-(slot, camera) fold-in keys: the
+            # coding noise of camera i at trace slot t never depends on which
+            # OTHER cameras exist or live — the property behind the
+            # dead-camera == absent-camera log equivalence.  self._key is the
+            # run key and is NOT advanced (matches episode mode).
+            keys = fleet_mod.slot_camera_keys(self._key, seg["t"],
+                                              np.arange(C))
+            live_t = np.ones(C, bool) if faults is None else faults[t]
+            reconnect_vec = live_t & ~live_prev
             if device_ctrl:
                 b, r, masks, cpack = self._slot_control_device(
-                    method, frames, t, ctx, use_elastic)
+                    method, frames, t, ctx, use_elastic,
+                    live=None if faults is None else live_t,
+                    reconnect=bool(reconnect_vec.any()))
             else:
                 b, r, masks, extra, area, alloc_kbps, est = \
                     self._slot_allocation(method, frames, W_t, est,
-                                          use_elastic)
+                                          use_elastic, live=live_t,
+                                          reconnect=bool(reconnect_vec.any()))
                 cpack = None
                 logs["extra"].append(extra)
                 logs["area"].append(area)
                 logs["alloc_kbps"].append(alloc_kbps)
             keep = None
             if method == "reducto":
-                keep, _ = self._reducto_keep(frames, t)
+                keep, _ = self._reducto_keep(
+                    frames, t,
+                    reconnect=None if faults is None else reconnect_vec)
 
-            out = self._slot_dispatch(frames, gts, masks, b, r, keys=keys,
-                                      keep=keep, gt_dev=gt_dev)
+            out = self._slot_dispatch(
+                frames, gts, masks, b, r, keys=keys, keep=keep, gt_dev=gt_dev,
+                live=None if faults is None else jnp.asarray(live_t))
+            live_prev = live_t
             logs["W"].append(W_t)
             if pending is not None:
                 harvest(pending)
@@ -779,12 +880,17 @@ class DeepStreamSystem:
             W_t = float(trace_kbps[t])
             seg = scene.segment()
             frames, gts = seg["frames"], seg["boxes"]
+            # same fold-in key scheme as the fleet paths (run key untouched)
+            keys = fleet_mod.slot_camera_keys(self._key, seg["t"],
+                                              np.arange(C))
             b, r, masks, extra, area, alloc_kbps, est = self._slot_allocation(
                 method, frames, W_t, est, use_elastic)
             if method == "reducto":
-                f1s, sizes = self._reducto_slot(frames, gts, b, first=t == 0)
+                f1s, sizes = self._reducto_slot(frames, gts, b, first=t == 0,
+                                                keys=keys)
             else:
-                f1s, sizes = self._encode_eval_all(frames, gts, masks, b, r)
+                f1s, sizes = self._encode_eval_all(frames, gts, masks, b, r,
+                                                   keys=keys)
             logs["extra"].append(extra)
             logs["area"].append(area)
             logs["alloc_kbps"].append(alloc_kbps)
@@ -800,7 +906,8 @@ class DeepStreamSystem:
     def _encode_eval_all(self, frames: np.ndarray,
                          gts: List[List[List[Tuple]]],
                          masks: Optional[jax.Array], b: np.ndarray,
-                         r: np.ndarray) -> Tuple[List[float], List[float]]:
+                         r: np.ndarray, keys: Optional[jax.Array] = None
+                         ) -> Tuple[List[float], List[float]]:
         """All cameras' encode->detect->score, one camera at a time (the
         sequential reference; the batched loop dispatches ``_slot_dispatch``)."""
         C = frames.shape[0]
@@ -808,12 +915,14 @@ class DeepStreamSystem:
         for i in range(C):
             f1, size = self.encode_eval(
                 frames[i], gts[i], None if masks is None else masks[i],
-                float(b[i]), float(r[i]))
+                float(b[i]), float(r[i]),
+                key=None if keys is None else keys[i])
             f1s.append(f1); sizes.append(size)
         return f1s, sizes
 
     def _reducto_slot(self, frames: np.ndarray, gts: List[List[List[Tuple]]],
-                      bs: np.ndarray, first: bool
+                      bs: np.ndarray, first: bool,
+                      keys: Optional[jax.Array] = None
                       ) -> Tuple[List[float], List[float]]:
         """Sequential reducto baseline slot: edge-diff frame filtering + fair
         shares, one camera at a time.
@@ -843,7 +952,8 @@ class DeepStreamSystem:
             t0 = time.perf_counter()
             decoded, size = codec_mod.encode_segment(
                 self.cfg.codec, jnp.asarray(fr), jnp.float32(H * W),
-                jnp.float32(bs[i]), jnp.float32(1.0), self._nextkey(),
+                jnp.float32(bs[i]), jnp.float32(1.0),
+                self._nextkey() if keys is None else keys[i],
                 num_frames=jnp.float32(len(kept_idx)))
             jax.block_until_ready(decoded)
             self._t("compress", t0)
@@ -866,3 +976,173 @@ class DeepStreamSystem:
                 f1 = f1 * w_keep + f1_re * (1 - w_keep)
             f1s.append(f1); sizes.append(float(size))
         return f1s, sizes
+
+
+# -- watchdog-supervised episode execution ------------------------------------
+
+
+@dataclass
+class SupervisorConfig:
+    """Policy knobs for ``EpisodeSupervisor``.
+
+    ``max_retries`` bounds re-dispatches of ONE run at the same mode rung;
+    ``backoff_s`` is the base of an exponential retry backoff (0 = retry
+    immediately — the default, since a failed jit dispatch has no cooldown
+    to wait out); ``degrade`` allows falling down the mode ladder when
+    retries are exhausted or the watchdog escalates; ``watchdog``
+    parameterizes the EMA+sigma straggler gate (``ft.watchdog``) fed with
+    per-run wall times."""
+    max_retries: int = 2
+    backoff_s: float = 0.0
+    degrade: bool = True
+    watchdog: ft_watchdog.WatchdogConfig = field(
+        default_factory=ft_watchdog.WatchdogConfig)
+
+
+class EpisodeSupervisor:
+    """Host-side supervisor wrapping ``DeepStreamSystem`` episode dispatch
+    with fault tolerance: bounded retry with backoff, an ``ft.watchdog``
+    straggler gate on per-run wall time, and a degraded-mode ladder.
+
+    The ladder (for an episode-mode system):
+
+      ``episode``          whole-trace lax.scan (the fast path)
+      ``episode_chunked``  the SAME episode program dispatched per
+                           next-smaller-bucket chunk of the trace — smaller
+                           programs, more dispatches; elastic/reducto state
+                           re-seeds at chunk boundaries, the documented
+                           degraded-mode approximation
+      ``pipelined``        the per-slot pipelined fleet loop (no episode
+                           scan at all)
+
+    A run that raises is retried up to ``cfg.max_retries`` times at the
+    current rung, then the supervisor degrades one rung (when
+    ``cfg.degrade``) and retries there; a run whose wall time trips the
+    watchdog's ``'replace'`` verdict degrades the NEXT run preemptively.
+    Rungs are sticky across runs (``self._rung``) — a degraded fleet stays
+    degraded until the caller resets it.  Every decision is appended to
+    ``self.events`` for tests and post-mortems.
+
+    ``fault_hook(attempt=, mode=)`` (tests/chaos injection) runs right
+    before each dispatch; raising from it counts as that attempt failing.
+    """
+
+    LADDER_EPISODE = ("episode", "episode_chunked", "pipelined")
+
+    def __init__(self, system: DeepStreamSystem,
+                 cfg: Optional[SupervisorConfig] = None,
+                 fault_hook: Optional[Any] = None):
+        self.system = system
+        self.cfg = cfg if cfg is not None else SupervisorConfig()
+        self.fault_hook = fault_hook
+        self.watchdog = ft_watchdog.Watchdog(self.cfg.watchdog)
+        self.events: List[Dict[str, Any]] = []
+        self._step = 0          # watchdog step counter (successful runs)
+        self._rung = 0          # current position on the mode ladder
+
+    @property
+    def mode(self) -> str:
+        return self._ladder()[min(self._rung, len(self._ladder()) - 1)]
+
+    def _ladder(self) -> Tuple[str, ...]:
+        if self.system.cfg.episode:
+            return self.LADDER_EPISODE
+        return ("pipelined",)
+
+    def run(self, scene, trace_kbps: np.ndarray, method: str = "deepstream",
+            use_elastic: Optional[bool] = None,
+            faults: Optional[np.ndarray] = None) -> Dict[str, np.ndarray]:
+        """One supervised bandwidth-trace run; same signature and logs as
+        ``DeepStreamSystem.run``."""
+        ladder = self._ladder()
+        last_err: Optional[BaseException] = None
+        for rung in range(min(self._rung, len(ladder) - 1), len(ladder)):
+            mode = ladder[rung]
+            for attempt in range(self.cfg.max_retries + 1):
+                if attempt and self.cfg.backoff_s > 0.0:
+                    time.sleep(self.cfg.backoff_s * (2.0 ** (attempt - 1)))
+                t0 = time.perf_counter()
+                try:
+                    if self.fault_hook is not None:
+                        self.fault_hook(attempt=attempt, mode=mode)
+                    logs = self._dispatch(mode, scene, trace_kbps, method,
+                                          use_elastic, faults)
+                except Exception as e:   # retry-with-backoff boundary
+                    last_err = e
+                    self.events.append({"kind": "retry", "mode": mode,
+                                        "attempt": attempt,
+                                        "error": repr(e)})
+                    continue
+                wall = time.perf_counter() - t0
+                self._step += 1
+                verdict = self.watchdog.record(self._step, wall)
+                self.events.append({"kind": "ok", "mode": mode,
+                                    "attempt": attempt, "wall_s": wall,
+                                    "verdict": verdict})
+                if (verdict == "replace" and self.cfg.degrade
+                        and rung + 1 < len(ladder)):
+                    # persistent straggling at this rung: degrade the NEXT
+                    # run preemptively (this one already succeeded)
+                    self._rung = rung + 1
+                    self.events.append({"kind": "degrade", "mode": mode,
+                                        "to": ladder[self._rung],
+                                        "cause": "watchdog"})
+                return logs
+            if self.cfg.degrade and rung + 1 < len(ladder):
+                self._rung = rung + 1
+                self.events.append({"kind": "degrade", "mode": mode,
+                                    "to": ladder[self._rung],
+                                    "cause": "retries_exhausted"})
+            else:
+                break
+        raise RuntimeError(
+            f"supervised run failed at every mode rung (last mode "
+            f"{self.mode!r}, {self.cfg.max_retries} retries each)"
+        ) from last_err
+
+    # -- mode dispatch ---------------------------------------------------------
+
+    def _dispatch(self, mode: str, scene, trace_kbps: np.ndarray, method: str,
+                  use_elastic: Optional[bool],
+                  faults: Optional[np.ndarray]) -> Dict[str, np.ndarray]:
+        if use_elastic is None:
+            use_elastic = method == "deepstream"
+        if mode == "episode":
+            return self.system.run_episode(scene, trace_kbps, method,
+                                           use_elastic, faults=faults)
+        if mode == "episode_chunked":
+            return self._run_chunked(scene, trace_kbps, method, use_elastic,
+                                     faults)
+        if mode == "pipelined":
+            return self.system._run_batched(scene, trace_kbps, method,
+                                            use_elastic, faults=faults)
+        raise ValueError(mode)
+
+    def _chunk_len(self, T: int) -> int:
+        """Degraded chunk size: the bucket BELOW the one a T-slot episode
+        would use (smaller compiled program, already warm from the bucket
+        ladder), floored at the smallest bucket."""
+        buckets = self.system.cfg.episode_buckets
+        if not buckets:
+            return max(1, T // 2)
+        below = [b for b in sorted(buckets)
+                 if b < fleet_mod.bucket_len(T, buckets)]
+        return below[-1] if below else sorted(buckets)[0]
+
+    def _run_chunked(self, scene, trace_kbps: np.ndarray, method: str,
+                     use_elastic: bool, faults: Optional[np.ndarray]
+                     ) -> Dict[str, np.ndarray]:
+        """The episode program dispatched per trace chunk.  Cross-chunk
+        carry (elastic EMA/debt, reducto reference, fault reconnect edges
+        at chunk boundaries) re-seeds fresh each chunk — the documented
+        approximation that buys degraded-mode progress when the whole-trace
+        program is the thing failing."""
+        T = len(trace_kbps)
+        step = self._chunk_len(T)
+        parts: List[Dict[str, np.ndarray]] = []
+        for i0 in range(0, T, step):
+            i1 = min(i0 + step, T)
+            parts.append(self.system.run_episode(
+                scene, np.asarray(trace_kbps)[i0:i1], method, use_elastic,
+                faults=None if faults is None else faults[i0:i1]))
+        return {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}

@@ -18,6 +18,13 @@ differential test harness and the benches draw from:
   * **scene families** — ``make_scene(name, seed)``: ``SceneConfig``
     variants spanning camera count, object density and motion energy
     (sparse suburbs to rush-hour junctions), again pure in (name, seed).
+  * **fault families** — ``make_faults(name, num_slots, num_cams, seed)``:
+    per-slot camera liveness masks ``(T, C) bool`` (True = alive) modelling
+    camera churn, link flaps and sensor dropouts.  The fleet threads these
+    through the episode scan exactly like reducto keep-flags; a dead camera
+    reuses the inert-camera contract (zero bits, zero bytes, excluded from
+    the allocators).  ``hard_outage`` is the one TRACE family allowed below
+    the 64 Kbps floor — its outage window is a true 0 Kbps link.
 
 Keep family functions closed-form over numpy: the harness regenerates them
 constantly and cross-process determinism is part of their test contract.
@@ -104,16 +111,34 @@ def adversarial_sawtooth(num_slots: int, seed: int = 0) -> np.ndarray:
     return np.clip(mu + rng.normal(0, 60.0, num_slots), FLOOR_KBPS, None)
 
 
+def hard_outage(num_slots: int, seed: int = 0) -> np.ndarray:
+    """Like ``outage`` but the window is a TRUE 0 Kbps link — the only
+    family exempt from the floor clip.  Exercises the allocators' zero-
+    capacity path (explicit all-zero infeasible allocation, no bits sent)
+    and elastic debt repayment on recovery."""
+    rng = _rng("hard_outage", seed)
+    x = np.clip(ar1_trace(rng, 1134.0, 400.0, num_slots), FLOOR_KBPS, None)
+    t0 = int(rng.integers(0, max(1, num_slots - 1)))
+    width = max(1, num_slots // 4)
+    x[t0:t0 + width] = 0.0
+    return x
+
+
 TRACE_FAMILIES: Dict[str, Callable[..., np.ndarray]] = {
     "fcc_low": _fcc("low"),
     "fcc_medium": _fcc("medium"),
     "fcc_high": _fcc("high"),
     "step_drop": step_drop,
     "outage": outage,
+    "hard_outage": hard_outage,
     "spike": spike,
     "diurnal": diurnal,
     "adversarial_sawtooth": adversarial_sawtooth,
 }
+
+# families whose traces may legitimately hit 0 Kbps (fault injection); every
+# other family keeps the 64 Kbps floor contract
+ZERO_FLOOR_FAMILIES = frozenset({"hard_outage"})
 
 # the paper's traces are sized for its 5-camera deployments; scale shares
 # linearly when evaluating other fleet sizes (the convention the test suite
@@ -129,17 +154,19 @@ def make_trace(name: str, num_slots: int, seed: int = 0,
                num_cams: Optional[int] = None) -> np.ndarray:
     """One named bandwidth trace, pure in (name, num_slots, seed).  With
     ``num_cams`` the trace is rescaled from the paper's 5-camera sizing to
-    the given fleet size (floor preserved)."""
+    the given fleet size (floor preserved; ``ZERO_FLOOR_FAMILIES`` keep
+    their true 0 Kbps slots through the rescale)."""
     fam = TRACE_FAMILIES[name]
+    floor = 0.0 if name in ZERO_FLOOR_FAMILIES else FLOOR_KBPS
     x = np.asarray(fam(int(num_slots), seed=int(seed)), np.float64)
-    if x.shape != (int(num_slots),) or not np.all(x >= FLOOR_KBPS - 1e-9):
+    if x.shape != (int(num_slots),) or not np.all(x >= floor - 1e-9):
         # ValueError, not assert (stripped under python -O): a family that
         # forgets the floor clip must not reach the allocator silently
         raise ValueError(f"family {name!r} broke the trace contract: "
                          f"shape {x.shape}, min {x.min() if x.size else None}")
     if num_cams is not None:
-        x = np.clip(x * (int(num_cams) / TRACE_REFERENCE_CAMS),
-                    FLOOR_KBPS, None)
+        scaled = x * (int(num_cams) / TRACE_REFERENCE_CAMS)
+        x = np.where(x <= 0.0, 0.0, np.clip(scaled, FLOOR_KBPS, None))
     return x
 
 
@@ -187,3 +214,93 @@ def scene_families() -> Tuple[str, ...]:
 def make_scene(name: str, seed: int = 0) -> SceneConfig:
     """One named SceneConfig, pure in (name, seed)."""
     return SCENE_FAMILIES[name](int(seed))
+
+
+# -- fault families -----------------------------------------------------------
+#
+# Camera liveness masks (T, C) bool, True = alive.  Contract (mirrored by
+# ``fleet.fleet_episode``'s docstring): a dead (camera, slot) cell sends zero
+# bits and zero bytes, is excluded from the bandwidth allocators, cannot
+# advance the reducto reference, and on reconnect is treated as a fresh
+# camera (reference re-seeded, elastic debt cleared).  Camera 0 stays alive
+# in every family — the fleet requires >= 1 live camera per slot (an all-dead
+# slot has no defined control step; model it as a ``hard_outage`` trace
+# instead).
+
+def _faults_none(rng, T: int, C: int) -> np.ndarray:
+    return np.ones((T, C), bool)
+
+
+def _faults_dead_camera(rng, T: int, C: int) -> np.ndarray:
+    """The LAST camera is dead for the whole trace — the headline
+    differential family: logs must equal a (C-1)-camera fleet's."""
+    live = np.ones((T, C), bool)
+    if C > 1:
+        live[:, C - 1] = False
+    return live
+
+
+def _faults_camera_churn(rng, T: int, C: int) -> np.ndarray:
+    """Cameras join and leave in contiguous windows (runtime attach/detach):
+    each non-anchor camera draws an active [t0, t1) window covering roughly
+    half the trace."""
+    live = np.zeros((T, C), bool)
+    live[:, 0] = True
+    for c in range(1, C):
+        width = int(rng.integers(max(1, T // 2), T + 1))
+        t0 = int(rng.integers(0, T - width + 1))
+        live[t0:t0 + width, c] = True
+    return live
+
+
+def _faults_camera_flap(rng, T: int, C: int) -> np.ndarray:
+    """One unstable link: a seed-chosen non-anchor camera toggles with a
+    short period (worst case for the reconnect path — the reducto reference
+    and elastic debt reset every flap)."""
+    live = np.ones((T, C), bool)
+    if C > 1:
+        c = int(rng.integers(1, C))
+        period = int(rng.integers(1, 4))
+        phase = int(rng.integers(0, period + 1))
+        live[:, c] = ((np.arange(T) + phase) // period) % 2 == 0
+    return live
+
+
+def _faults_sensor_corrupt(rng, T: int, C: int) -> np.ndarray:
+    """IID per-(slot, camera) segment drops (~15%): a corrupt segment is
+    modelled as the camera being absent for that slot (nothing usable was
+    captured).  The anchor camera is immune."""
+    live = rng.uniform(size=(T, C)) >= 0.15
+    live[:, 0] = True
+    return live
+
+
+FAULT_FAMILIES: Dict[str, Callable[..., np.ndarray]] = {
+    "none": _faults_none,
+    "dead_camera": _faults_dead_camera,
+    "camera_churn": _faults_camera_churn,
+    "camera_flap": _faults_camera_flap,
+    "sensor_corrupt": _faults_sensor_corrupt,
+}
+
+
+def fault_families() -> Tuple[str, ...]:
+    return tuple(FAULT_FAMILIES)
+
+
+def make_faults(name: str, num_slots: int, num_cams: int,
+                seed: int = 0) -> np.ndarray:
+    """One named liveness mask, pure in (name, num_slots, num_cams, seed).
+
+    Returns ``(num_slots, num_cams) bool`` with True = alive; every slot
+    keeps at least one live camera (validated, like ``make_trace``'s floor
+    contract — a family that starves a slot must not reach the fleet
+    silently)."""
+    T, C = int(num_slots), int(num_cams)
+    live = np.asarray(FAULT_FAMILIES[name](_rng("faults_" + name, seed),
+                                           T, C))
+    if live.dtype != np.bool_ or live.shape != (T, C) \
+            or not np.all(live.any(axis=1)):
+        raise ValueError(f"fault family {name!r} broke the liveness "
+                         f"contract: dtype {live.dtype}, shape {live.shape}")
+    return live

@@ -41,7 +41,32 @@ class ServeEngine:
         self.cache = lm.init_cache(batch_slots, max_seq)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int32)
+        # per-leaf batch axis, found by diffing against a batch-1 cache —
+        # matching on dim == batch_slots alone is ambiguous (a layer or head
+        # axis can coincide with the slot count, e.g. 2 layers x 2 slots)
+        self._batch_axes = jax.tree.map(
+            lambda big, one: next(
+                (i for i, (bd, od) in enumerate(zip(big.shape, one.shape))
+                 if bd == batch_slots and od == 1), None),
+            self.cache, lm.init_cache(1, max_seq))
         self._decode = jax.jit(lm.decode, donate_argnums=(2,))
+        self._decode_masked = jax.jit(self._masked_decode)
+
+    def _masked_decode(self, params, tokens, cache, pos, row_mask):
+        """Decode at ``pos`` but keep the cache rows of slots NOT in
+        ``row_mask`` (slots at a different sequence position): the full-batch
+        decode writes every row's KV at ``pos``, which for an out-of-group
+        slot is the wrong cell — restore those rows from the pre-step cache.
+        Not donated: the input cache is live in the restore."""
+        logits, new_cache = self.lm.decode(params, tokens, cache, pos)
+        def restore(new, old, ax):
+            if ax is None:
+                return new
+            shape = [1] * new.ndim
+            shape[ax] = self.slots
+            return jnp.where(row_mask.reshape(shape), new, old)
+        return logits, jax.tree.map(restore, new_cache, cache,
+                                    self._batch_axes)
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slot_req):
@@ -91,16 +116,36 @@ class ServeEngine:
         tokens = np.zeros((self.slots, 1), np.int32)
         for i in live:
             tokens[i, 0] = self.slot_req[i].out_tokens[-1]
-        pos = int(max(self.slot_pos[i] for i in live))  # synchronized position
-        logits, self.cache = self._decode(self.params,
-                                          jnp.asarray(tokens), self.cache,
-                                          jnp.int32(pos))
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        # each slot decodes at ITS OWN position: requests admitted with
+        # different prompt lengths sit at different cache cells, and lock-
+        # stepping them to max(slot_pos) writes shorter requests' KV into the
+        # wrong rows (and burns cache cells they never filled).  Group live
+        # slots by position — the homogeneous case (one group) keeps the
+        # single donated full-batch decode.
+        groups: Dict[int, List[int]] = {}
+        for i in live:
+            groups.setdefault(int(self.slot_pos[i]), []).append(i)
+        if len(groups) == 1:
+            pos = next(iter(groups))
+            logits, self.cache = self._decode(self.params,
+                                              jnp.asarray(tokens), self.cache,
+                                              jnp.int32(pos))
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        else:
+            nxt = np.zeros(self.slots, np.int64)
+            for pos, idxs in sorted(groups.items()):
+                mask = np.zeros(self.slots, bool)
+                mask[idxs] = True
+                logits, self.cache = self._decode_masked(
+                    self.params, jnp.asarray(tokens), self.cache,
+                    jnp.int32(pos), jnp.asarray(mask))
+                sub = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                nxt[idxs] = sub[idxs]
         finished = []
         for i in live:
             r = self.slot_req[i]
             r.out_tokens.append(int(nxt[i]))
-            self.slot_pos[i] = pos + 1
+            self.slot_pos[i] += 1
             if len(r.out_tokens) >= r.max_new_tokens or self.slot_pos[i] >= self.max_seq - 1:
                 r.done = True
                 finished.append(r)

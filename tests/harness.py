@@ -47,6 +47,10 @@ LANES = {
     "scenarios": [
         "tests/test_scenarios.py",
     ],
+    "faults": [
+        "tests/test_faults.py",
+        "tests/test_ft.py",
+    ],
 }
 
 METHODS = ("deepstream", "jcab", "reducto", "static")

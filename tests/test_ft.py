@@ -1,0 +1,104 @@
+"""Unit tests for ``repro.ft.watchdog``: the EMA+sigma straggler gate, the
+simulated fleet it is exercised against, and the preemption-aware
+checkpointer.  (The gate's integration with episode dispatch is covered by
+tests/test_faults.py's EpisodeSupervisor tests.)"""
+import signal
+
+import numpy as np
+import pytest
+
+from repro.ft.watchdog import (PreemptionCheckpointer, SimulatedFleet,
+                               Watchdog, WatchdogConfig)
+
+
+def _feed_healthy(wd: Watchdog, n: int, base: float = 0.1,
+                  start: int = 0) -> None:
+    for i in range(n):
+        # deterministic small jitter keeps sigma > 0 without tripping
+        assert wd.record(start + i, base * (1 + 0.01 * ((i % 3) - 1))) == "ok"
+
+
+def test_watchdog_warmup_immunity():
+    wd = Watchdog(WatchdogConfig(warmup_steps=5))
+    # a huge compile-time outlier inside warmup must not count
+    assert wd.record(0, 30.0) == "ok"
+    for i in range(1, 5):
+        assert wd.record(i, 0.1) == "ok"
+    assert wd.stats.violations == 0 and not wd.stats.events
+
+
+def test_watchdog_detect_escalate_recover():
+    cfg = WatchdogConfig(warmup_steps=5, escalate_after=3)
+    wd = Watchdog(cfg)
+    _feed_healthy(wd, 10)
+    # sustained straggling: two flags, then escalation to 'replace'
+    assert wd.record(10, 1.0) == "straggler"
+    assert wd.record(11, 1.0) == "straggler"
+    assert wd.record(12, 1.0) == "replace"
+    assert [e["status"] for e in wd.stats.events] == \
+        ["straggler", "straggler", "replace"]
+    # a healthy step resets the consecutive-violation counter...
+    assert wd.record(13, 0.1) == "ok"
+    assert wd.stats.violations == 0
+    # ...so the next violation is a fresh 'straggler', not 'replace'
+    assert wd.record(14, 1.0) == "straggler"
+
+
+def test_watchdog_stragglers_do_not_poison_baseline():
+    wd = Watchdog(WatchdogConfig(warmup_steps=5))
+    _feed_healthy(wd, 10)
+    ema_before = wd.stats.ema
+    for i in range(3):
+        wd.record(10 + i, 5.0)
+    # only healthy steps update the EMA — else a slow patch raises the
+    # threshold until stragglers look normal
+    assert wd.stats.ema == ema_before
+
+
+def test_simulated_fleet_straggler_and_death():
+    fleet = SimulatedFleet(4, base_step_time=0.1, seed=0)
+    t = fleet.step_times()
+    assert t.shape == (4,) and np.all(t > 0) and np.all(np.isfinite(t))
+    fleet.inject_straggler(2, factor=5.0)
+    t = fleet.step_times()
+    assert t[2] > 2 * t[[0, 1, 3]].max()
+    fleet.kill(1)
+    assert np.isinf(fleet.step_times()[1])
+    # SPMD: the fleet runs at the slowest live worker's pace — a dead
+    # worker stalls the step entirely
+    assert np.isinf(fleet.synchronous_step_time())
+
+
+def test_simulated_fleet_drives_watchdog_to_replace():
+    fleet = SimulatedFleet(4, base_step_time=0.1, seed=1)
+    wd = Watchdog(WatchdogConfig(warmup_steps=5, escalate_after=3))
+    for i in range(12):
+        assert wd.record(i, fleet.synchronous_step_time()) == "ok"
+    fleet.inject_straggler(3, factor=10.0)
+    verdicts = [wd.record(12 + i, fleet.synchronous_step_time())
+                for i in range(3)]
+    assert verdicts == ["straggler", "straggler", "replace"]
+
+
+def test_checkpointer_periodic_saves():
+    saved = []
+    ckpt = PreemptionCheckpointer(saved.append, every=3,
+                                  install_signal=False)
+    for step in range(1, 8):
+        ckpt.maybe_save(step)
+    assert saved == [3, 6]
+
+
+def test_checkpointer_sigterm_saves_now_and_exits():
+    saved = []
+    ckpt = PreemptionCheckpointer(saved.append, every=100,
+                                  install_signal=True)
+    try:
+        assert not ckpt.maybe_save(1)       # far from a periodic save
+        signal.raise_signal(signal.SIGTERM)  # spot preemption notice
+        assert ckpt.preempted
+        with pytest.raises(SystemExit) as exc:
+            ckpt.maybe_save(2)
+        assert exc.value.code == 143 and saved == [2]
+    finally:
+        signal.signal(signal.SIGTERM, signal.SIG_DFL)

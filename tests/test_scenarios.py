@@ -297,17 +297,24 @@ def test_scene_family_episode_small_fleet(detectors):
 @given(seed=st.integers(0, 100_000),
        name=st.sampled_from(trace_families()))
 def test_trace_family_invariants(seed, name):
-    """Every family, any seed: the 64 Kbps clip floor holds, values are
-    finite, the length contract holds, and the trace is a pure function of
-    (name, num_slots, seed)."""
+    """Every family, any seed: the per-family floor holds (64 Kbps clip for
+    most; ``ZERO_FLOOR_FAMILIES`` like hard_outage may hit a true 0 Kbps,
+    never negative), values are finite, the length contract holds, and the
+    trace is a pure function of (name, num_slots, seed)."""
+    floor = (0.0 if name in scenarios.ZERO_FLOOR_FAMILIES
+             else scenarios.FLOOR_KBPS)
     tr = make_trace(name, 48, seed=seed)
     assert tr.shape == (48,)
     assert np.all(np.isfinite(tr))
-    assert np.all(tr >= scenarios.FLOOR_KBPS - 1e-9)
+    assert np.all(tr >= floor - 1e-9)
     np.testing.assert_array_equal(tr, make_trace(name, 48, seed=seed))
-    # scaling preserves the floor
+    # scaling preserves the floor (and never resurrects a 0 Kbps outage slot)
     small = make_trace(name, 48, seed=seed, num_cams=1)
-    assert np.all(small >= scenarios.FLOOR_KBPS - 1e-9)
+    assert np.all(small >= floor - 1e-9)
+    if name in scenarios.ZERO_FLOOR_FAMILIES:
+        np.testing.assert_array_equal(small == 0.0, tr == 0.0)
+    else:
+        assert np.all(small >= scenarios.FLOOR_KBPS - 1e-9)
 
 
 @settings(max_examples=4, deadline=None)

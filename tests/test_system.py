@@ -75,6 +75,38 @@ def test_serve_engine_greedy_matches_manual():
     assert toks == r.out_tokens
 
 
+def test_serve_engine_mixed_prompt_lengths():
+    # regression: two requests with DIFFERENT prompt lengths share the batch
+    # — the engine must decode each slot at its own cache position (the old
+    # lock-step max(slot_pos) wrote short prompts' KV into the wrong cells)
+    from repro.configs import smoke_config
+    from repro.models.model import LM
+    from repro.serve.engine import Request, ServeEngine
+    cfg = smoke_config("granite-8b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    pa = np.arange(10, dtype=np.int32) % cfg.vocab_size
+    pb = (np.arange(6, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+    eng = ServeEngine(lm, params, batch_slots=2, max_seq=32)
+    ra = Request(rid=0, prompt=pa, max_new_tokens=5)
+    rb = Request(rid=1, prompt=pb, max_new_tokens=5)
+    stats = eng.run([ra, rb])
+    assert stats["requests"] == 2
+    # each request must match its own single-request greedy decode
+    for r, prompt in ((ra, pa), (rb, pb)):
+        lg, cache = lm.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                               32)
+        toks = [int(jnp.argmax(lg[0, -1]))]
+        pos = len(prompt)
+        for _ in range(4):
+            lg, cache = lm.decode(params,
+                                  jnp.asarray([[toks[-1]]], jnp.int32),
+                                  cache, jnp.int32(pos))
+            toks.append(int(jnp.argmax(lg[0, 0])))
+            pos += 1
+        assert toks == r.out_tokens, f"rid={r.rid}"
+
+
 def test_data_pipeline_determinism_and_sharding():
     from repro.data.pipeline import DataConfig, SyntheticTokenSource
     cfg = DataConfig(global_batch=8, seq_len=32, vocab_size=100, seed=3)
