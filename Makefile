@@ -22,12 +22,16 @@
 # modes), the checkify-guarded diagnostics runs (SystemConfig.checked on,
 # invariant violations must raise), and the watchdog/supervisor recovery
 # ladder.  Runs WITHOUT fake devices: the checked lane forces shard off.
+# `ci-serve` is the continuous-serving lane: the windowed stream runner's
+# kill-and-resume differential (SIGTERM + injected exception, all methods,
+# zero recompiles after restore), the SLO watchdog ladder, checkpoint
+# crash-atomicity, and the bounded-queue/drain-budget regressions.
 # Lane pytest selections live ONCE, in tests/harness.py (LANES) — the lanes
 # shell out to it instead of duplicating test lists here.
 PY := PYTHONPATH=src python
 
 .PHONY: test bench-quick ci ci-sharded ci-guard ci-episode ci-scenarios \
-	ci-faults
+	ci-faults ci-serve
 
 test:
 	$(PY) -m pytest -q
@@ -52,4 +56,8 @@ ci-scenarios:
 ci-faults:
 	$(PY) tests/harness.py --lane faults
 
-ci: test bench-quick ci-sharded ci-guard ci-episode ci-scenarios ci-faults
+ci-serve:
+	$(PY) tests/harness.py --lane serve
+
+ci: test bench-quick ci-sharded ci-guard ci-episode ci-scenarios ci-faults \
+	ci-serve

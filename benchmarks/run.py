@@ -25,6 +25,7 @@ BENCHES = [
     "bench_e2e_utility",  # Fig. 3
     "bench_latency",      # Fig. 6
     "bench_kernels",      # kernel vs oracle timings
+    "bench_serve",        # continuous-serving SLO (window p50/p99, slots/s)
     "bench_roofline",     # dry-run roofline table (reads artifacts/dryrun)
 ]
 

@@ -136,8 +136,12 @@ def _write_checkpoint(host_leaves, treedef_str: str, path: Path, *,
             }
         f.flush()
         os.fsync(f.fileno())
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    (tmp / COMMIT_MARKER).write_text("ok")
+    for name, text in (("manifest.json", json.dumps(manifest)),
+                       (COMMIT_MARKER, "ok")):
+        with open(tmp / name, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
     if path.exists():
         import shutil
         shutil.rmtree(path)
@@ -156,7 +160,14 @@ def save(tree: Any, path: str | Path, *, step: int = 0,
 
 
 def is_committed(path: str | Path) -> bool:
-    return (Path(path) / COMMIT_MARKER).exists()
+    """Committed = the atomic rename happened.  A ``*.tmp`` staging
+    directory is NEVER committed, even though it contains a marker file
+    just before the rename — a crash in that window must fall back to the
+    previous checkpoint, not restore from a directory whose contents were
+    never made durable as a unit."""
+    path = Path(path)
+    return (not path.name.endswith(".tmp")
+            and (path / COMMIT_MARKER).exists())
 
 
 def latest_committed(root: str | Path) -> Optional[Path]:

@@ -812,7 +812,10 @@ class EpisodeOut(NamedTuple):
     cpacks: jax.Array      # (T, 4) [extra, area, alloc_kbps, feasible]
     key: jax.Array         # the run key, unchanged (codec keys are a pure
                            # per-(slot, camera) fold — see slot_camera_keys)
-    est: ElasticStateJax   # final elastic state
+    est: ElasticStateJax   # final elastic state (last ACTIVE slot's)
+    ref: jax.Array         # (C, H, W) final reducto reference frames — the
+                           # cross-run carry a windowed stream hands to the
+                           # next window (zeros-passthrough for non-reducto)
 
 
 _EPISODE_COMPILE_COUNTS: Dict[Tuple, int] = {}
@@ -826,9 +829,9 @@ def episode_compile_count() -> int:
 
 def _episode_impl(server_params, light_params, mlp_params, jcab_util,
                   jcab_res, lam, scene_params: DeviceSceneParams,
-                  trace, live_tr, t_idx, t_first, t_len, key0, skey,
+                  trace, live_tr, active, t_idx, t_first, t_len, key0, skey,
                   tau_wl, tau_wh,
-                  est0: ElasticStateJax, ref0, *, method: str,
+                  est0: ElasticStateJax, ref0, live_prev0, *, method: str,
                   scfg: SceneConfig, ccfg: CodecConfig, ecfg: ElasticConfig,
                   bitrates: Tuple[int, ...], resolutions: Tuple[float, ...],
                   use_elastic: bool, use_kernel: bool, w_cap: int,
@@ -849,18 +852,20 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
     the allocators and the slot logs; a reconnect edge
     (``live & ~live_prev``) resets that camera's reducto reference and
     clears the fleet's elastic debt — the module docstring's fault
-    contract, traced end to end with zero extra transfers.  The previous
-    liveness row is seeded all-True, so a resumed run treats slot-0 liveness
-    as steady state (no spurious reconnect).
+    contract, traced end to end with zero extra transfers.  ``live_prev0``
+    ((num_cams,) bool) seeds the previous liveness row — all-True for a
+    standalone run (slot-0 liveness is steady state, no spurious
+    reconnect), the last row of the previous window for a streamed one.
 
     Bucketed traces: the scanned (T_b,) operands may be PADDED past the
     active prefix (``t_len`` slots) up to a trace-length bucket.  Padded
-    slots run the full per-slot program on dead inputs, but the returned
-    elastic state is gathered from the stacked carry at slot ``t_len - 1``
-    — the padding can never advance the controller, and the caller slices
-    the stacked logs back to ``t_len``.  (The reducto reference a padded
-    slot writes is dead too: padding sits after every active slot and the
-    reference resets per run.)
+    slots run the full per-slot program on dead inputs, but the scanned
+    ``active`` flag FREEZES every carry leaf there (``jnp.where(active,
+    new, old)``), so the final scan carry — elastic state, reducto
+    reference, liveness row — is exactly the last ACTIVE slot's.  The
+    padding can never advance the controller (or any other observable
+    state: the whole carry is the windowed-serving handoff surface), and
+    the caller slices the stacked logs back to ``t_len``.
 
     Sharding: everything per-camera runs on the local camera shard; the
     control step is the one cross-camera stage, so its (a, c) features are
@@ -892,7 +897,7 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
 
     def step(carry, xs):
         est, ref, live_prev = carry
-        t, W_t, live_t = xs
+        t, W_t, live_t, active_t = xs
         frames, gtb, gtv = synth_mod.segments_device(
             scfg, scene_params, skey, t, gt_pad=gt_pad)
         keys_l = slot_camera_keys(key0, t, scene_params.cam_ids)
@@ -941,17 +946,19 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
                          eval_frames=eval_frames,
                          block_size=block_size, conf_thresh=conf_thresh,
                          with_reuse=True, checked=checked)
-        # the post-slot est carry is ALSO stacked so a bucketed trace can
-        # hand back the last ACTIVE slot's state instead of the carry a
-        # padded tail would have advanced
-        return (co.est, ref, live_t), (out.host_pack, co.pack, co.est)
+        # padded tail slots FREEZE the whole carry (est, reducto ref,
+        # liveness row): the final scan carry is then exactly the last
+        # ACTIVE slot's state — the handoff a windowed stream checkpoints
+        # and reloads, with no stacked-carry gather needed
+        new_c, old_c = (co.est, ref, live_t), (est, ref, live_prev)
+        frozen = jax.tree.map(
+            lambda n, o: jnp.where(active_t, n, o), new_c, old_c)
+        return frozen, (out.host_pack, co.pack)
 
-    live_prev0 = jnp.ones((num_cams,), bool)
-    _, (packs, cpacks, est_st) = jax.lax.scan(
-        step, (est0, ref0, live_prev0), (t_idx, trace, live_tr))
-    last = jnp.maximum(jnp.asarray(t_len, jnp.int32) - 1, 0)
-    est = jax.tree.map(lambda x: x[last], est_st)
-    return EpisodeOut(packs=packs, cpacks=cpacks, key=key0, est=est)
+    (est, ref_out, _), (packs, cpacks) = jax.lax.scan(
+        step, (est0, ref0, live_prev0), (t_idx, trace, live_tr, active))
+    return EpisodeOut(packs=packs, cpacks=cpacks, key=key0, est=est,
+                      ref=ref_out)
 
 
 def _get_episode_executable(mesh: Optional[Mesh], **statics):
@@ -973,10 +980,11 @@ def _get_episode_executable(mesh: Optional[Mesh], **statics):
     # (server, light, mlp, jcab_util, jcab_res, lam) replicated (P() is a
     # pytree prefix, so it covers whole param trees); scene params carry
     # their own per-field specs; carries/trace/liveness replicated; ref0
-    # sharded
+    # sharded (and the returned ref carry likewise)
     in_specs = (P(), P(), P(), P(), P(), P(), DeviceSceneParams.pspecs(),
-                P(), P(), P(), P(), P(), P(), P(), P(), P(), P(), cam)
-    out_specs = EpisodeOut(P(None, None, "camera"), P(), P(), P())
+                P(), P(), P(), P(), P(), P(), P(), P(), P(), P(), P(), cam,
+                P())
+    out_specs = EpisodeOut(P(None, None, "camera"), P(), P(), P(), cam)
     fn = _EXEC_CACHE[key] = sharded_jit(counted, mesh, in_specs, out_specs)
     return fn
 
@@ -993,8 +1001,10 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
                   conf_thresh: float = 0.4, gt_pad: int = 16,
                   t_start: int = 0, mesh: Optional[Mesh] = None,
                   buckets: Optional[Sequence[int]] = EPISODE_BUCKETS,
-                  faults: Optional[np.ndarray] = None, checked: bool = False
-                  ) -> EpisodeOut:
+                  faults: Optional[np.ndarray] = None, checked: bool = False,
+                  ref0: Optional[jax.Array] = None,
+                  live_prev0: Optional[np.ndarray] = None,
+                  t_first: Optional[int] = None) -> EpisodeOut:
     """Dispatch a WHOLE bandwidth trace as one compiled episode.
 
     ``faults`` is the optional (T, C) bool liveness mask (True = live;
@@ -1024,7 +1034,16 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
     must be computed from the ACTIVE trace (``allocation.trace_capacity``
     on the unpadded array) — the zero-Kbps padding never widens it.
     ``buckets=None`` disables padding (the unbucketed reference program the
-    equivalence tests diff against)."""
+    equivalence tests diff against).
+
+    Streaming carry (windowed serving, ``serve.stream``): ``ref0`` ((C, H,
+    W) reducto reference), ``live_prev0`` ((C,) bool previous liveness row)
+    and ``t_first`` (the STREAM's first slot, distinct from this window's
+    ``t_start``) seed the episode carry from the previous window so a chain
+    of windows is slot-for-slot identical to one long episode; the final
+    carry comes back in ``EpisodeOut`` (``est``, ``ref``).  All three
+    default to the standalone-run behavior (zeros / all-live /
+    ``t_start``)."""
     # the DP backtrack is only shard_map-scan-safe in its unrolled (<= 64
     # camera) form — fail loudly instead of hitting the XLA CHECK abort the
     # fori_loop fallback would trigger inside this scan (see backtrack_jax)
@@ -1061,7 +1080,14 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
         # the traced DP's capacity clamp trivially satisfied there
         trace = jnp.concatenate(
             [jnp.asarray(trace, jnp.float32), jnp.zeros(T_b - T, jnp.float32)])
-    ref0 = jnp.zeros((C_pad, scene_cfg.height, scene_cfg.width), jnp.float32)
+    active = jnp.arange(T_b) < T
+    if ref0 is None:
+        ref0 = jnp.zeros((C_pad, scene_cfg.height, scene_cfg.width),
+                         jnp.float32)
+    else:
+        ref0 = pad_leading(jnp.asarray(ref0, jnp.float32), C_pad)
+    live_prev0 = (jnp.ones((num_cams,), bool) if live_prev0 is None
+                  else jnp.asarray(live_prev0, bool))
     J = len(bitrates)
     if jcab_util is None:
         jcab_util = jnp.zeros((num_cams, J), jnp.float32)
@@ -1079,10 +1105,11 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
         sharded=mesh is not None, checked=bool(checked))
     # slot indices continue from the scene's cursor (t_start) — data values,
     # not statics, so resumed episodes reuse the same executable; t_first
-    # marks this RUN's first slot (reducto's reference-reset rule) and
-    # t_len the ACTIVE prefix of a bucketed trace
+    # marks the STREAM's first slot (reducto's reference-reset rule —
+    # defaults to this run's t_start for a standalone run) and t_len the
+    # ACTIVE prefix of a bucketed trace
     t_idx = jnp.arange(T_b, dtype=jnp.int32) + jnp.int32(t_start)
-    t_first = jnp.int32(t_start)
+    t_first = jnp.int32(t_start if t_first is None else t_first)
     t_len = jnp.int32(T)
     if mesh is not None:
         # EXPLICIT mesh placement of every operand (replicated params and
@@ -1098,11 +1125,11 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
             for x, s in zip(scene_params, DeviceSceneParams.pspecs())))
         ref0 = jax.device_put(ref0, cam_sh)
         (server_params, light_params, mlp_params, jcab_util, jcab_res, lam,
-         trace, live_tr, t_idx, t_first, t_len, key0, skey, tau_wl, tau_wh,
-         est0) = rep(
+         trace, live_tr, active, t_idx, t_first, t_len, key0, skey, tau_wl,
+         tau_wh, est0, live_prev0) = rep(
             (server_params, light_params, mlp_params, jcab_util, jcab_res,
-             lam, trace, live_tr, t_idx, t_first, t_len, key0, skey, tau_wl,
-             tau_wh, est0))
+             lam, trace, live_tr, active, t_idx, t_first, t_len, key0, skey,
+             tau_wl, tau_wh, est0, live_prev0))
     # the timed episode proper: everything is device-resident by now, so the
     # whole T-slot trace executes under the transfer guard in BOTH
     # directions with NO scoped exemptions — any per-slot upload or fetch
@@ -1110,8 +1137,9 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
     err = None
     with jax.transfer_guard("disallow"):
         out = fn(server_params, light_params, mlp_params, jcab_util,
-                 jcab_res, lam, scene_params, trace, live_tr, t_idx, t_first,
-                 t_len, key0, skey, tau_wl, tau_wh, est0, ref0)
+                 jcab_res, lam, scene_params, trace, live_tr, active, t_idx,
+                 t_first, t_len, key0, skey, tau_wl, tau_wh, est0, ref0,
+                 live_prev0)
         if checked:
             err, out = out
         jax.block_until_ready(out.packs)
@@ -1125,7 +1153,11 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
         # reaches the host
         out = out._replace(packs=out.packs[:T], cpacks=out.cpacks[:T])
     if C_pad != num_cams:
-        out = out._replace(packs=out.packs[:, :, :num_cams])
+        # the ref carry is sliced back to the REAL cameras too: padded
+        # cameras re-seed as zeros next window, which is invisible — their
+        # rows never feed any real camera's keep/control signal
+        out = out._replace(packs=out.packs[:, :, :num_cams],
+                           ref=out.ref[:num_cams])
     return out
 
 

@@ -76,7 +76,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -217,6 +217,37 @@ class SystemConfig:
         return np.asarray(self.weights, np.float64)
 
 
+class EpisodeCarry(NamedTuple):
+    """The cross-run serving carry: everything a windowed stream must hand
+    from one run to the next so a CHAIN of runs is slot-for-slot identical
+    to one uninterrupted run over the concatenated trace.
+
+    Lifecycle (the serving contract, see ``serve.stream``):
+
+      1. Run window k with ``carry=`` (None for the stream's first window).
+      2. The runner records the post-run carry on ``system.last_carry`` —
+         ``est``/``ref`` are DEVICE arrays straight out of the episode scan
+         (no fetch), ``live_prev``/``t_first`` host values the caller
+         already owns.
+      3. Checkpoint ``last_carry`` + the codec run key + host counters at
+         the window boundary (``ckpt.AsyncSaver``); a restored process
+         rebuilds the scene (pure in (seed, t)), sets its cursor, and
+         passes the restored carry into window k+1.
+
+    Not part of the carry — by construction, not omission: codec keys are a
+    pure per-(slot, camera) fold of the run key (``fleet.slot_camera_keys``,
+    the key never advances), and the scene is pure in (seed, cursor), so
+    both "resume" for free.
+
+    ``t_first`` is the STREAM's first global slot: reducto force-keeps
+    frame 0 only when a slot's global index equals it, so later windows do
+    NOT re-seed the reference the carry just handed them."""
+    est: "elastic_mod.ElasticStateJax"   # device elastic EMA/variance/debt
+    ref: jax.Array                       # (C, H, W) reducto reference frames
+    live_prev: np.ndarray                # (C,) bool last served liveness row
+    t_first: int                         # stream-origin slot index
+
+
 class DeepStreamSystem:
     def __init__(self, cfg: SystemConfig, light_params: Any, server_params: Any,
                  mlp_params: Any = None):
@@ -230,6 +261,9 @@ class DeepStreamSystem:
         self._key = jax.random.PRNGKey(1234)
         self._reducto_ref: Optional[jax.Array] = None       # batched runs
         self._reducto_ref_host: List[Optional[np.ndarray]] = []  # sequential
+        # post-run serving carry (EpisodeCarry) recorded by run_episode and
+        # the carried pipelined loop — what serve.stream checkpoints
+        self.last_carry: Optional[EpisodeCarry] = None
         self.timers: Dict[str, List[float]] = {}
         self.mesh = (shard_rules.camera_mesh()
                      if cfg.batched and cfg.shard == "auto" else None)
@@ -484,7 +518,7 @@ class DeepStreamSystem:
         return float(np.mean([det.f1_score(boxes, valid, gts_missed[j])
                               for j in sel]))
 
-    def _reducto_keep(self, frames: jax.Array, t: int,
+    def _reducto_keep(self, frames: jax.Array, first_slot: bool,
                       reconnect: Optional[np.ndarray] = None
                       ) -> Tuple[jax.Array, None]:
         """Traced reducto keep decision for the batched loop: motion ->
@@ -492,13 +526,15 @@ class DeepStreamSystem:
         host fetches (the pre-episode per-slot 'keep' D2H sync is gone —
         kept/missed frame selection happens inside the slot-step program
         via ``fleet.keep_selection``).  The cross-slot reference (last kept
-        frame) is threaded through ``self._reducto_ref``; ``reconnect``
-        (C,) bool marks cameras whose reference went stale while dead —
-        they re-seed from frame 0 like a run start."""
+        frame) is threaded through ``self._reducto_ref``; ``first_slot``
+        marks the first slot of a FRESH stream (no reference yet — a
+        carry-seeded window passes False, its reference is live);
+        ``reconnect`` (C,) bool marks cameras whose reference went stale
+        while dead — they re-seed from frame 0 like a run start."""
         C, H, W = frames.shape[0], frames.shape[2], frames.shape[3]
         if self._reducto_ref is None:
             self._reducto_ref = jnp.zeros((C, H, W), jnp.float32)
-        first = np.full(C, t == 0)
+        first = np.full(C, bool(first_slot))
         if reconnect is not None:
             first = first | np.asarray(reconnect, bool)
         keep, self._reducto_ref = fleet_mod.reducto_keep_step(
@@ -556,7 +592,8 @@ class DeepStreamSystem:
     def run_episode(self, scene: DeviceScene, trace_kbps: np.ndarray,
                     method: str = "deepstream",
                     use_elastic: Optional[bool] = None,
-                    faults: Optional[np.ndarray] = None
+                    faults: Optional[np.ndarray] = None,
+                    carry: Optional[EpisodeCarry] = None
                     ) -> Dict[str, np.ndarray]:
         """Whole-trace device-resident episode: one ``fleet_episode``
         dispatch covers every slot (segment generation included — ``scene``
@@ -568,7 +605,16 @@ class DeepStreamSystem:
         ``DeviceScene`` seeds (<= 1e-5, see tests/test_episode.py), for any
         trace length: T is padded to a ``cfg.episode_buckets`` bucket inside
         ``fleet_episode`` and the harvested logs come back already sliced
-        to the active T."""
+        to the active T.
+
+        Serving contract (``carry=``, see ``EpisodeCarry``): passing the
+        previous window's carry seeds the elastic state, reducto reference,
+        previous liveness row and stream-origin ``t_first``, making a chain
+        of windowed calls over one reused scene slot-for-slot identical to
+        a single call over the concatenated trace.  Every call (carried or
+        not) records its post-run carry on ``self.last_carry`` — device
+        arrays straight from the scan, no extra fetch — which is what
+        ``serve.stream`` checkpoints at window boundaries."""
         if use_elastic is None:
             use_elastic = method == "deepstream"
         if not (self.cfg.batched and self.cfg.alloc == "device"):
@@ -580,8 +626,11 @@ class DeepStreamSystem:
         assert scene.G == self._G, (scene.G, self._G)
         C = self.cfg.scene.num_cameras
         lam = self.cfg.lam()
+        t_begin = scene._t
         # untimed prep: every operand device-resident before dispatch
         ctx = self._control_context(method, trace_kbps, use_elastic)
+        if carry is not None:
+            ctx["est"] = carry.est
         deep = method in ("deepstream", "deepstream_no_elastic")
         t0 = time.perf_counter()
         # fleet_episode preps/places inputs, then runs the whole trace under
@@ -603,12 +652,20 @@ class DeepStreamSystem:
             use_kernel=self.cfg.use_kernels, gt_pad=self._G,
             t_start=scene._t, mesh=self.mesh,
             buckets=self.cfg.episode_buckets, faults=faults,
-            checked=self.cfg.checked)
+            checked=self.cfg.checked,
+            ref0=None if carry is None else carry.ref,
+            live_prev0=None if carry is None else carry.live_prev,
+            t_first=None if carry is None else carry.t_first)
         self._t("episode", t0)
         # advance the scene cursor exactly like T pipelined segment() calls
         # would — a reused scene continues, matching the pipelined reference
         scene._t += len(trace_kbps)
         self._key = out.key
+        self.last_carry = EpisodeCarry(
+            est=out.est, ref=out.ref,
+            live_prev=(np.asarray(faults[-1], bool) if faults is not None
+                       else np.ones(C, bool)),
+            t_first=(carry.t_first if carry is not None else t_begin))
         t0 = time.perf_counter()
         # the ONE whole-trace harvest — deliberately NOT transfer-guard
         # exempted: it happens after the timed region, so episode runs need
@@ -768,7 +825,8 @@ class DeepStreamSystem:
 
     def _run_batched(self, scene: MultiCameraScene, trace_kbps: np.ndarray,
                      method: str, use_elastic: bool,
-                     faults: Optional[np.ndarray] = None
+                     faults: Optional[np.ndarray] = None,
+                     carry: Optional[EpisodeCarry] = None
                      ) -> Dict[str, np.ndarray]:
         """Pipelined fleet loop: every method routes through ONE compiled
         slot-step.  With ``alloc="device"`` the control loop runs on device
@@ -778,13 +836,24 @@ class DeepStreamSystem:
         ``alloc="host"`` the numpy reference control path syncs on one
         packed (a, c) fetch per slot.  ``faults`` (T, C) bool threads the
         liveness mask through control, keep-flags and the slot-step as
-        traced data (same executables, no extra D2H)."""
+        traced data (same executables, no extra D2H).
+
+        ``carry`` (device-control only) seeds the same serving carry as
+        ``run_episode`` — ``serve.stream``'s degraded "pipelined" rung
+        stays slot-for-slot identical to the episode rungs — and every
+        device-control run records ``self.last_carry``."""
         lam = self.cfg.lam()
         C = self.cfg.scene.num_cameras
         device_ctrl = self.cfg.alloc == "device"
+        if carry is not None and not device_ctrl:
+            raise ValueError("carry-seeded runs need alloc='device' (the "
+                             "host control path has no device carry)")
         est = ElasticState()
+        t_begin = getattr(scene, "_t", 0)
         ctx = (self._control_context(method, trace_kbps, use_elastic)
                if device_ctrl else None)
+        if carry is not None:
+            ctx["est"] = carry.est
         logs = {k: [] for k in ("utility", "mean_f1", "bytes", "W", "extra",
                                 "alloc_kbps", "area")}
 
@@ -806,8 +875,9 @@ class DeepStreamSystem:
                 logs["area"].append(float(cp[1]))
                 logs["alloc_kbps"].append(float(cp[2]))
 
-        self._reducto_ref = None
-        live_prev = np.ones(C, bool)
+        self._reducto_ref = None if carry is None else carry.ref
+        live_prev = (np.ones(C, bool) if carry is None
+                     else np.asarray(carry.live_prev, bool))
         pending: Optional[Tuple] = None
         for t in range(len(trace_kbps)):
             W_t = float(trace_kbps[t])
@@ -848,7 +918,7 @@ class DeepStreamSystem:
             keep = None
             if method == "reducto":
                 keep, _ = self._reducto_keep(
-                    frames, t,
+                    frames, t == 0 and carry is None,
                     reconnect=None if faults is None else reconnect_vec)
 
             out = self._slot_dispatch(
@@ -864,6 +934,15 @@ class DeepStreamSystem:
                 harvest((out, cpack))
         if pending is not None:
             harvest(pending)
+        if device_ctrl:
+            ref = self._reducto_ref
+            if ref is None:      # non-reducto: the reference passes through
+                ref = (carry.ref if carry is not None else jnp.zeros(
+                    (C, self.cfg.scene.height, self.cfg.scene.width),
+                    jnp.float32))
+            self.last_carry = EpisodeCarry(
+                est=ctx["est"], ref=ref, live_prev=np.asarray(live_prev),
+                t_first=(carry.t_first if carry is not None else t_begin))
         return {k: np.asarray(v) for k, v in logs.items()}
 
     def _run_sequential(self, scene: MultiCameraScene, trace_kbps: np.ndarray,

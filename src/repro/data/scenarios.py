@@ -288,6 +288,27 @@ def fault_families() -> Tuple[str, ...]:
     return tuple(FAULT_FAMILIES)
 
 
+# -- serving streams ----------------------------------------------------------
+
+# the canonical soak length: one simulated day of 86.4 s slots at the
+# diurnal trace's sinusoid period — the windowed-serving soak test and the
+# serve bench both replay this stream (quick lanes truncate it)
+SOAK_SLOTS = 1000
+
+
+def make_soak_stream(num_slots: int = SOAK_SLOTS, num_cams: int = 3,
+                     seed: int = 0, fault_family: str = "camera_churn"
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """The long-horizon serving input: a diurnal bandwidth trace (slow
+    low<->high sinusoid — the always-on service's day/night load swing)
+    paired with a liveness mask from ``fault_family``.  Pure in every
+    argument, so a killed-and-restarted serving process can regenerate the
+    exact stream and replay from any slot offset."""
+    trace = make_trace("diurnal", num_slots, seed=seed, num_cams=num_cams)
+    live = make_faults(fault_family, num_slots, num_cams, seed=seed)
+    return trace, live
+
+
 def make_faults(name: str, num_slots: int, num_cams: int,
                 seed: int = 0) -> np.ndarray:
     """One named liveness mask, pure in (name, num_slots, num_cams, seed).

@@ -42,6 +42,16 @@ class Watchdog:
         self.cfg = cfg
         self.stats = StepStats()
 
+    def rebaseline(self) -> None:
+        """Forget the EMA/variance baseline (fresh warmup) but KEEP the
+        event log.  Call on a mode change: after a supervisor degrades (or
+        recovers) the step-time distribution shifts wholesale, and gating
+        the new mode's first steps against the old mode's baseline either
+        mis-flags every step (degrade to a slower rung) or masks real
+        stragglers (recover to a faster one)."""
+        events = self.stats.events
+        self.stats = StepStats(events=events)
+
     def record(self, step: int, step_time: float) -> str:
         """Returns 'ok' | 'straggler' | 'replace'."""
         s, c = self.stats, self.cfg
@@ -70,29 +80,64 @@ class Watchdog:
 
 
 class PreemptionCheckpointer:
-    """Save every N steps + immediately on SIGTERM (spot/preemption notice)."""
+    """Save every N steps + immediately on SIGTERM/SIGINT (spot/preemption
+    notice).  The previously installed handlers are CHAINED, not discarded
+    — stacking a second checkpointer (or running under a framework that
+    installed its own handler) keeps everyone's handler live — and restored
+    on ``close()`` / ``__exit__``, so a finished checkpointer leaves the
+    process's signal disposition exactly as it found it."""
+
+    SIGNALS = (signal.SIGTERM, signal.SIGINT)
 
     def __init__(self, save_fn: Callable[[int], None], every: int = 100,
                  install_signal: bool = True):
         self.save_fn = save_fn
         self.every = every
         self.preempted = False
+        self.preempt_signum: Optional[int] = None
         self.last_saved = -1
+        self._prev_handlers: Dict[int, object] = {}
         if install_signal:
-            try:
-                signal.signal(signal.SIGTERM, self._on_sigterm)
-            except ValueError:
-                pass  # not on main thread (tests)
+            for sig in self.SIGNALS:
+                try:
+                    self._prev_handlers[sig] = signal.signal(
+                        sig, self._on_signal)
+                except ValueError:
+                    pass  # not on main thread (tests)
 
-    def _on_sigterm(self, signum, frame):
+    def _on_signal(self, signum, frame):
         self.preempted = True
+        self.preempt_signum = signum
+        prev = self._prev_handlers.get(signum)
+        # chain a real previous handler: SIG_DFL/SIG_IGN/None are not
+        # callables, and Python's default SIGINT handler would raise
+        # KeyboardInterrupt right here — displacing it is the point
+        if callable(prev) and prev is not signal.default_int_handler:
+            prev(signum, frame)
+
+    def close(self) -> None:
+        """Restore the signal handlers this checkpointer displaced."""
+        for sig, prev in self._prev_handlers.items():
+            try:
+                signal.signal(sig, prev)
+            except (ValueError, TypeError):
+                pass
+        self._prev_handlers = {}
+
+    def __enter__(self) -> "PreemptionCheckpointer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def maybe_save(self, step: int) -> bool:
         if self.preempted or (step % self.every == 0 and step != self.last_saved):
             self.save_fn(step)
             self.last_saved = step
             if self.preempted:
-                raise SystemExit(143)
+                # conventional 128+signum exit status (143 for SIGTERM)
+                raise SystemExit(128 + (self.preempt_signum
+                                        or signal.SIGTERM))
             return True
         return False
 

@@ -1,7 +1,17 @@
-"""Serving driver: continuous-batched decode over a zoo backbone.
+"""Serving drivers: the LM analytics engine and the fleet stream runner.
+
+LM engine (continuous-batched decode over a zoo backbone)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke \
         --requests 6 --slots 4 --prompt-len 24 --max-new 8
+
+Fleet stream (crash-safe windowed serving over the compiled episode
+executables, ``serve.stream``; re-run the same command after a kill to
+restore from the latest committed checkpoint and continue)::
+
+    PYTHONPATH=src python -m repro.launch.serve --fleet-stream \
+        --stream-slots 64 --window-slots 8 --method deepstream \
+        --ckpt-dir artifacts/serve_ckpt
 """
 from __future__ import annotations
 
@@ -11,16 +21,71 @@ import jax
 import numpy as np
 
 
+def run_fleet_stream(args) -> None:
+    """Windowed fleet serving over a soak stream: build the episode-mode
+    system (harness-default control artifacts), offer the diurnal stream
+    window by window, checkpoint at boundaries, print the SLO stats."""
+    from repro.core import utility as util_mod
+    from repro.core.scheduler import DeepStreamSystem, SystemConfig
+    from repro.data.scenarios import make_soak_stream
+    from repro.data.synthetic import DeviceScene, SceneConfig
+    from repro.serve.stream import StreamConfig, StreamingFleetRunner
+    from repro.train.detector_train import train_detector
+
+    scene_cfg = SceneConfig(seed=33)
+    sys_cfg = SystemConfig(scene=scene_cfg, episode=True, eval_frames=3,
+                           w_cap_kbps=8000.0)
+    system = DeepStreamSystem(
+        sys_cfg, train_detector("light", steps=300, batch=12, cache=True),
+        train_detector("server", steps=600, batch=12, cache=True))
+    system.mlp = util_mod.init_utility_mlp(jax.random.PRNGKey(0))
+    system.tau_wl, system.tau_wh = 10.0, 50.0
+    system.jcab_table = np.linspace(0.2, 0.8, 18).reshape(6, 3).astype(
+        np.float32)
+    trace, live = make_soak_stream(args.stream_slots,
+                                   num_cams=scene_cfg.num_cameras)
+    runner = StreamingFleetRunner(
+        system, DeviceScene(scene_cfg), method=args.method,
+        cfg=StreamConfig(window_slots=args.window_slots,
+                         ckpt_dir=args.ckpt_dir,
+                         install_signal=args.ckpt_dir is not None))
+    with runner:
+        if runner.restore():
+            print(f"# restored window={runner.window} t_next={runner.t_next}")
+        t = runner.t_next
+        while t < len(trace):
+            t += runner.offer(trace[t:t + args.window_slots],
+                              faults=live[t:t + args.window_slots])
+            runner.serve()
+        runner.serve(flush=True)
+        print({k: round(v, 4) if isinstance(v, float) else v
+               for k, v in runner.stats().items()})
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--fleet-stream", action="store_true",
+                    help="serve the multi-camera fleet stream "
+                         "(serve.stream) instead of the LM engine")
+    ap.add_argument("--stream-slots", type=int, default=64)
+    ap.add_argument("--window-slots", type=int, default=8)
+    ap.add_argument("--method", default="deepstream")
+    ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
+
+    if args.fleet_stream:
+        run_fleet_stream(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required for the LM engine "
+                 "(or pass --fleet-stream)")
 
     from repro.configs import get_config, smoke_config
     from repro.launch.mesh import make_host_mesh, make_production_mesh

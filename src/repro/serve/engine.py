@@ -153,19 +153,37 @@ class ServeEngine:
                 self.slot_pos[i] = 0
         return finished
 
-    def run(self, requests: List[Request]) -> Dict[str, float]:
-        """Drain a request list; returns throughput stats."""
+    def run(self, requests: List[Request],
+            max_steps: Optional[int] = None) -> Dict[str, float]:
+        """Drain a request list; returns throughput stats.
+
+        ``max_steps`` bounds the decode loop (default: enough for every
+        request to emit its full budget serially, plus slack — a loop that
+        outlives it is stuck, not slow).  Exhausting it raises with the
+        stuck slots named (slot index, request id, sequence position,
+        tokens emitted) plus the un-admitted backlog, so an
+        admission-starvation loop (e.g. zero decode slots with work still
+        pending) is diagnosable instead of a silent hang."""
         pending = list(requests)
         done: List[Request] = []
+        if max_steps is None:
+            max_steps = 64 + 2 * sum(r.max_new_tokens for r in requests)
         t0 = time.perf_counter()
         steps = 0
         while pending or any(r is not None for r in self.slot_req):
+            if steps >= max_steps:
+                stuck = [f"slot {i}: rid={r.rid} pos={int(self.slot_pos[i])} "
+                         f"emitted={len(r.out_tokens)}/{r.max_new_tokens}"
+                         for i, r in enumerate(self.slot_req)
+                         if r is not None] or ["no live slots"]
+                raise RuntimeError(
+                    f"serve loop did not drain in {max_steps} steps: "
+                    f"{len(pending)} request(s) never admitted "
+                    f"({self.slots} slot(s) configured); " + "; ".join(stuck))
             while pending and self._free_slot() is not None:
                 self.admit(pending.pop(0))
             done += self.step()
             steps += 1
-            if steps > 10_000:
-                raise RuntimeError("serve loop did not drain")
         dt = time.perf_counter() - t0
         toks = sum(len(r.out_tokens) for r in done)
         return {"requests": len(done), "tokens": toks, "wall_s": dt,

@@ -51,6 +51,10 @@ LANES = {
         "tests/test_faults.py",
         "tests/test_ft.py",
     ],
+    "serve": [
+        "tests/test_serve_stream.py",
+        "tests/test_ckpt.py",
+    ],
 }
 
 METHODS = ("deepstream", "jcab", "reducto", "static")

@@ -1,0 +1,175 @@
+"""Checkpoint crash-atomicity + exact episode-carry round-trips.
+
+The serving loop's crash-safety rests on two properties of
+``repro.ckpt.checkpoint``:
+
+  * **Atomic commit** — a save killed at ANY point leaves either the
+    previous committed checkpoint restorable or the new one, never a
+    half-written directory that restores.  The dangerous window is between
+    the data/manifest/marker writes and the atomic rename: the ``*.tmp``
+    staging directory already contains a ``COMMITTED`` marker file there,
+    and must still not count as committed.
+  * **Bit-stable round-trips** — the episode carry (codec run key,
+    ``ElasticStateJax``, reducto reference frames, liveness row) restores
+    EXACTLY (zlib/zstd are lossless, dtypes preserved), including when the
+    reference frames were sharded over a 4-fake-device camera mesh.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core import elastic as elastic_mod
+
+
+def _carry_tree(seed: int = 7):
+    """A realistically-shaped episode carry with non-trivial values."""
+    rng = np.random.default_rng(seed)
+    est = elastic_mod.ElasticStateJax(
+        a_ema=jnp.float32(0.3173), a_var=jnp.float32(0.0442),
+        debt_kbits=jnp.float32(-11.625), initialized=jnp.asarray(True))
+    return {
+        "est": est,
+        "ref": jnp.asarray(rng.standard_normal((3, 24, 32)), jnp.float32),
+        "live_prev": jnp.asarray([True, False, True]),
+        "key": jax.random.PRNGKey(1234),
+    }
+
+
+def _zero_target(tree):
+    return jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+
+
+def _assert_bitstable(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype, (x.dtype, y.dtype)
+        # exact equality — the checkpoint codec is lossless
+        np.testing.assert_array_equal(x, y)
+
+
+def test_carry_roundtrip_bitstable(tmp_path):
+    tree = _carry_tree()
+    ckpt.save(tree, tmp_path / "w1", step=1, metadata={"t_next": 8})
+    got, meta = ckpt.restore(tmp_path / "w1", _zero_target(tree))
+    _assert_bitstable(tree, got)
+    assert meta["t_next"] == 8 and meta["step"] == 1
+
+
+def test_async_save_roundtrip_bitstable(tmp_path):
+    saver = ckpt.AsyncSaver()
+    tree = _carry_tree()
+    saver.save(tree, tmp_path / "w1", step=1)
+    saver.wait()
+    got, _ = ckpt.restore(tmp_path / "w1", _zero_target(tree))
+    _assert_bitstable(tree, got)
+
+
+def test_crash_between_write_and_commit_falls_back(tmp_path, monkeypatch):
+    """Kill the saver AFTER the staging dir is fully written (marker file
+    included) but BEFORE the atomic rename: the new checkpoint must NOT be
+    committed and restore must fall back to the previous one."""
+    tree1, tree2 = _carry_tree(1), _carry_tree(2)
+    ckpt.save(tree1, tmp_path / "w1", step=1)
+
+    real_rename = os.rename
+
+    def crash_rename(src, dst):
+        if str(src).endswith(".tmp"):
+            raise OSError("simulated kill before atomic rename")
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(os, "rename", crash_rename)
+    with pytest.raises(OSError, match="simulated kill"):
+        ckpt.save(tree2, tmp_path / "w2", step=2)
+    monkeypatch.undo()
+
+    # the staging dir exists and even contains the marker file — it must
+    # still not count as committed, nor win latest_committed (its name
+    # sorts AFTER the real checkpoints)
+    assert (tmp_path / "w2.tmp" / ckpt.COMMIT_MARKER).exists()
+    assert not ckpt.is_committed(tmp_path / "w2.tmp")
+    assert not ckpt.is_committed(tmp_path / "w2")
+    assert ckpt.latest_committed(tmp_path) == tmp_path / "w1"
+    got, meta = ckpt.restore(ckpt.latest_committed(tmp_path),
+                             _zero_target(tree1))
+    _assert_bitstable(tree1, got)
+    assert meta["step"] == 1
+
+    # a retried save over the stale staging dir commits cleanly
+    ckpt.save(tree2, tmp_path / "w2", step=2)
+    assert ckpt.latest_committed(tmp_path) == tmp_path / "w2"
+    got2, _ = ckpt.restore(tmp_path / "w2", _zero_target(tree2))
+    _assert_bitstable(tree2, got2)
+
+
+def test_restore_rejects_uncommitted(tmp_path):
+    (tmp_path / "w1").mkdir()
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(tmp_path / "w1", _carry_tree())
+    assert ckpt.latest_committed(tmp_path) is None
+
+
+_SHARDED_SCRIPT = r"""
+import sys
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+sys.path.insert(0, @SRC@)
+from repro.ckpt import checkpoint as ckpt
+from repro.core import elastic as elastic_mod
+
+assert jax.device_count() == 4, jax.device_count()
+mesh = Mesh(np.array(jax.devices()), ("camera",))
+cam = NamedSharding(mesh, P("camera"))
+rep = NamedSharding(mesh, P())
+
+rng = np.random.default_rng(3)
+est = elastic_mod.ElasticStateJax(
+    a_ema=jnp.float32(0.5), a_var=jnp.float32(0.01),
+    debt_kbits=jnp.float32(4.0), initialized=jnp.asarray(True))
+tree = {
+    "est": jax.device_put(est, rep),
+    "ref": jax.device_put(
+        jnp.asarray(rng.standard_normal((4, 24, 32)), jnp.float32), cam),
+    "live_prev": jax.device_put(jnp.asarray([True, True, False, True]), rep),
+    "key": jax.device_put(jax.random.PRNGKey(99), rep),
+}
+path = @PATH@
+ckpt.save(tree, path, step=3)
+target = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+shardings = jax.tree.map(lambda x: cam if x.ndim == 3 else rep, tree)
+got, meta = ckpt.restore(path, target, shardings=shardings)
+assert meta["step"] == 3
+for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+    assert np.asarray(x).dtype == np.asarray(y).dtype
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+# the restored reference landed back on the camera mesh
+assert got["ref"].sharding.is_equivalent_to(cam, got["ref"].ndim)
+print("CKPT-SHARDED-PASS")
+"""
+
+
+def test_carry_roundtrip_sharded_4dev(tmp_path):
+    """The same carry round-trip with the reducto reference sharded over a
+    4-fake-device camera mesh: save gathers addressable shards, restore
+    device_puts back onto the mesh, values bit-stable."""
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env.pop("REPRO_FAKE_DEVICES", None)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    script = (_SHARDED_SCRIPT
+              .replace("@SRC@", repr(str(root / "src")))
+              .replace("@PATH@", repr(str(tmp_path / "w3"))))
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=300,
+                          env=env, cwd=str(root))
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "CKPT-SHARDED-PASS" in proc.stdout, proc.stdout

@@ -91,14 +91,61 @@ def test_checkpointer_periodic_saves():
 
 def test_checkpointer_sigterm_saves_now_and_exits():
     saved = []
-    ckpt = PreemptionCheckpointer(saved.append, every=100,
-                                  install_signal=True)
-    try:
+    with PreemptionCheckpointer(saved.append, every=100,
+                                install_signal=True) as ckpt:
         assert not ckpt.maybe_save(1)       # far from a periodic save
         signal.raise_signal(signal.SIGTERM)  # spot preemption notice
         assert ckpt.preempted
         with pytest.raises(SystemExit) as exc:
             ckpt.maybe_save(2)
         assert exc.value.code == 143 and saved == [2]
+
+
+def test_checkpointer_sigint_saves_now_and_exits():
+    # Ctrl-C / SIGINT is a preemption notice too: save now, exit 130 — and
+    # Python's default KeyboardInterrupt handler must NOT be chained (it
+    # would raise inside our handler and abort the graceful save)
+    saved = []
+    with PreemptionCheckpointer(saved.append, every=100,
+                                install_signal=True) as ckpt:
+        signal.raise_signal(signal.SIGINT)   # no KeyboardInterrupt raised
+        assert ckpt.preempted and ckpt.preempt_signum == signal.SIGINT
+        with pytest.raises(SystemExit) as exc:
+            ckpt.maybe_save(1)
+        assert exc.value.code == 130 and saved == [1]
+
+
+def test_checkpointer_chains_and_restores_previous_handler():
+    hits = []
+    prev = signal.signal(signal.SIGTERM, lambda s, f: hits.append(s))
+    try:
+        ckpt = PreemptionCheckpointer([].append, every=100,
+                                      install_signal=True)
+        signal.raise_signal(signal.SIGTERM)
+        # our handler ran AND chained the pre-existing one
+        assert ckpt.preempted and hits == [signal.SIGTERM]
+        ckpt.close()
+        # close() put the displaced handler back
+        assert signal.getsignal(signal.SIGTERM) is not ckpt._on_signal
+        signal.raise_signal(signal.SIGTERM)
+        assert hits == [signal.SIGTERM] * 2
     finally:
-        signal.signal(signal.SIGTERM, signal.SIG_DFL)
+        signal.signal(signal.SIGTERM, prev)
+
+
+def test_watchdog_rebaseline_keeps_events_resets_baseline():
+    cfg = WatchdogConfig(warmup_steps=5, escalate_after=3)
+    wd = Watchdog(cfg)
+    _feed_healthy(wd, 10)
+    wd.record(10, 1.0)
+    events_before = list(wd.stats.events)
+    assert events_before
+    wd.rebaseline()
+    # the event log survives; the EMA baseline and counters do not —
+    # a mode change (supervisor rung switch) is a fresh warmup
+    assert wd.stats.events == events_before
+    assert wd.stats.count == 0 and wd.stats.ema == 0.0
+    # the new mode's 10x-slower steps are warmup, not stragglers
+    for i in range(cfg.warmup_steps):
+        assert wd.record(11 + i, 1.0) == "ok"
+    assert wd.record(16, 1.0) == "ok"

@@ -1,0 +1,335 @@
+"""Crash-safe continuous serving: ``serve.stream`` differentials.
+
+The headline is the KILL-AND-RESUME differential: interrupt a windowed
+stream mid-trace (an injected exception, or a real SIGTERM through the
+``ft.PreemptionCheckpointer``), restart from scratch, restore the latest
+committed checkpoint, re-offer the stream from ``t_next`` — and the
+concatenated logs must match an UNINTERRUPTED episode run over the same
+trace to <= 1e-5, for every method and fault family, with ZERO episode
+recompiles after restore (the restored carry re-enters the executables the
+pre-crash process compiled) and the episode-mode D2H contract intact
+(exactly the 2 'harvest' fetches per episode dispatch, nothing else).
+
+Also here: windowed == continuous (no crash at all), the SLO watchdog
+ladder (degrade under injected stragglers -> pipelined, recover, logs STILL
+exact — every rung serves the same carry chain), bounded-queue load
+shedding with drop accounting that survives restore, a small soak, and the
+ServeEngine drain-budget starvation regression.
+"""
+import os
+import signal
+
+import jax
+import numpy as np
+import pytest
+
+import harness
+from repro.core import fleet as fleet_mod
+from repro.core import scheduler as sched_mod
+from repro.data.scenarios import make_faults, make_scene, make_soak_stream, \
+    make_trace
+from repro.data.synthetic import DeviceScene
+from repro.ft.watchdog import WatchdogConfig
+from repro.serve.stream import LADDER, StreamConfig, StreamingFleetRunner
+
+SCENE = ("urban_mid", 33)
+STREAM_KEYS = ("utility", "mean_f1", "bytes", "alloc_kbps", "extra", "area")
+
+
+def _scene_cfg():
+    fam, seed = SCENE
+    return make_scene(fam, seed)
+
+
+def _stream_inputs(T, fault_family, *, trace_seed=8, fault_seed=3):
+    scfg = _scene_cfg()
+    trace = make_trace("fcc_medium", T, seed=trace_seed,
+                       num_cams=scfg.num_cameras)
+    faults = make_faults(fault_family, T, scfg.num_cameras, seed=fault_seed)
+    return scfg, trace, faults
+
+
+def _continuous_reference(detectors, scfg, trace, faults, method):
+    """One uninterrupted episode-mode run over the whole trace."""
+    s = harness.build_system(detectors, "episode", scfg)
+    s._key = jax.random.PRNGKey(1234)
+    return s.run(DeviceScene(scfg), trace, method=method, faults=faults)
+
+
+def _runner(detectors, scfg, method, cfg, **kw):
+    s = harness.build_system(detectors, "episode", scfg)
+    s._key = jax.random.PRNGKey(1234)
+    return StreamingFleetRunner(s, DeviceScene(scfg), method=method,
+                                cfg=cfg, **kw)
+
+
+def _logs(runner):
+    return {k: np.asarray(v) for k, v in runner.logs.items()}
+
+
+# -- windowed == continuous ----------------------------------------------------
+
+@pytest.mark.parametrize("method", harness.METHODS)
+def test_windowed_matches_continuous(detectors, method):
+    """Carry handoff across window boundaries makes the windowed stream
+    slot-for-slot identical to one uninterrupted episode — including a
+    final partial (flushed) window through the same bucket executable."""
+    scfg, trace, faults = _stream_inputs(12, "camera_flap")
+    ref = _continuous_reference(detectors, scfg, trace, faults, method)
+
+    runner = _runner(detectors, scfg, method, StreamConfig(window_slots=8))
+    assert runner.offer(trace, faults=faults) == len(trace)
+    served = runner.serve(flush=True)        # one full + one partial window
+    assert served == 2 and runner.t_next == len(trace)
+    harness.assert_logs_match(ref, _logs(runner), keys=STREAM_KEYS,
+                              ctx=f"stream {method}")
+
+
+# -- kill-and-resume -----------------------------------------------------------
+
+class _InjectedCrash(Exception):
+    pass
+
+
+def _interrupt_hook(kind):
+    """Interrupt the stream mid-trace: an injected exception right before
+    window 2 dispatches, or a real SIGTERM right before window 1 (the
+    handler sets ``preempted``; window 1 still serves, then the
+    checkpointer saves BLOCKING at its boundary and exits 143).  Either
+    way windows 0-1 are committed and window 2 remains to resume."""
+    def hook(window, rung):
+        if kind == "exception" and window == 2:
+            raise _InjectedCrash(f"window {window}")
+        if kind == "sigterm" and window == 1:
+            signal.raise_signal(signal.SIGTERM)
+    return hook
+
+
+# every method under BOTH fault families, each (interrupt kind) covered
+# for every method across the grid
+KILL_GRID = [(m, fam, kind)
+             for m, kind in zip(harness.METHODS,
+                                ["exception", "sigterm"] * 2)
+             for fam in ("camera_flap", "camera_churn")]
+
+
+@pytest.mark.parametrize("method,family,kind", KILL_GRID)
+def test_kill_and_resume_differential(detectors, method, family, kind,
+                                      tmp_path):
+    T, WIN = 24, 8
+    scfg, trace, faults = _stream_inputs(T, family)
+    ref = _continuous_reference(detectors, scfg, trace, faults, method)
+
+    # process A: serve, get killed before window 2 of 3
+    cfg = StreamConfig(window_slots=WIN, ckpt_dir=str(tmp_path),
+                       install_signal=(kind == "sigterm"))
+    rA = _runner(detectors, scfg, method, cfg,
+                 fault_hook=_interrupt_hook(kind))
+    rA.offer(trace, faults=faults)
+    if kind == "exception":
+        with pytest.raises(_InjectedCrash):
+            rA.serve(flush=True)
+        rA.saver.wait()                      # the async save may be in flight
+    else:
+        # SIGTERM lands mid-window; the preempted checkpointer saves
+        # BLOCKING at the window boundary and exits 128+15
+        with pytest.raises(SystemExit) as exc:
+            rA.serve(flush=True)
+        assert exc.value.code == 143
+    rA.checkpointer.close()
+    assert rA.window >= 2 and rA.t_next < T
+
+    # process B: fresh system + runner, restore, re-offer from t_next
+    n_compiles = fleet_mod.episode_compile_count()
+    d_before = sched_mod.d2h_fetch_counts()
+    rB = _runner(detectors, scfg, method,
+                 StreamConfig(window_slots=WIN, ckpt_dir=str(tmp_path)))
+    assert rB.restore()
+    assert rB.t_next == rB.window * WIN
+    rB.offer(trace[rB.t_next:], faults=faults[rB.t_next:])
+    resumed_windows = rB.serve(flush=True)
+    assert rB.t_next == T
+
+    # zero recompiles after restore, and the episode D2H contract holds:
+    # exactly 2 'harvest' fetches per resumed window, no keep/control
+    d_after = sched_mod.d2h_fetch_counts()
+    assert fleet_mod.episode_compile_count() == n_compiles, \
+        "episode executable recompiled after restore"
+    assert d_after["harvest"] - d_before["harvest"] == 2 * resumed_windows
+    assert d_after["keep"] == d_before["keep"]
+    assert d_after["control"] == d_before["control"]
+
+    harness.assert_logs_match(ref, _logs(rB), keys=STREAM_KEYS,
+                              ctx=f"kill-resume {method}/{family}/{kind}")
+
+
+def test_restore_without_checkpoint_is_fresh_start(detectors, tmp_path):
+    scfg, trace, faults = _stream_inputs(8, "camera_flap")
+    runner = _runner(detectors, scfg, "static",
+                     StreamConfig(window_slots=8, ckpt_dir=str(tmp_path)))
+    assert not runner.restore()              # empty dir -> fresh start
+    assert runner.window == 0 and runner.t_next == 0
+
+
+# -- SLO watchdog ladder -------------------------------------------------------
+
+def test_watchdog_ladder_degrades_recovers_exactly(detectors):
+    """Injected straggler walls drive the ladder episode ->
+    episode_small -> pipelined; healthy walls climb it back.  Every rung
+    threads the SAME carry chain, so the mixed-rung stream's logs STILL
+    match the uninterrupted episode reference."""
+    T, WIN = 40, 4
+    scfg, trace, faults = _stream_inputs(T, "camera_flap")
+    ref = _continuous_reference(detectors, scfg, trace, faults, "deepstream")
+
+    # synthetic turnaround schedule (seconds), indexed by window: healthy
+    # baseline 1.0 with straggler spikes at windows 2 and 4
+    walls = {2: 6.0, 4: 6.0}
+
+    cfg = StreamConfig(
+        window_slots=WIN, queue_slots=T, recover_after=2,
+        watchdog=WatchdogConfig(warmup_steps=1, escalate_after=1))
+    runner = _runner(detectors, scfg, "deepstream", cfg,
+                     wall_hook=lambda w, wall: walls.get(w, 1.0))
+    runner.offer(trace, faults=faults)
+    runner.serve(flush=True)
+
+    kinds = [(e["kind"], e.get("to")) for e in runner.events
+             if e["kind"] in ("degrade", "recover")]
+    assert kinds == [("degrade", "episode_small"),
+                     ("degrade", "pipelined"),
+                     ("recover", "episode_small"),
+                     ("recover", "episode")]
+    assert runner.rung == 0 and runner.stats()["rung"] == LADDER[0]
+    # ladder exactness: rung changes are numerically invisible
+    harness.assert_logs_match(ref, _logs(runner), keys=STREAM_KEYS,
+                              ctx="ladder")
+
+
+def test_watchdog_rebaseline_on_rung_change(detectors):
+    """After a degrade, the new rung's own (slower or faster) walls are a
+    fresh warmup — the old rung's baseline never mis-gates them into an
+    immediate second degrade."""
+    T, WIN = 24, 4
+    scfg, trace, faults = _stream_inputs(T, "camera_flap")
+    # one spike degrades at window 2; the NEW rung then runs steadily at
+    # 3x the old baseline — rebaseline makes that its normal
+    def wall_hook(w, wall):
+        return 6.0 if w == 2 else (3.0 if w > 2 else 1.0)
+
+    cfg = StreamConfig(
+        window_slots=WIN, queue_slots=T, recover_after=100,
+        watchdog=WatchdogConfig(warmup_steps=1, escalate_after=1))
+    runner = _runner(detectors, scfg, "static", cfg, wall_hook=wall_hook)
+    runner.offer(trace, faults=faults)
+    runner.serve(flush=True)
+    degrades = [e for e in runner.events if e["kind"] == "degrade"]
+    assert len(degrades) == 1 and runner.rung == 1
+
+
+# -- bounded ingest + drop accounting ------------------------------------------
+
+def test_bounded_queue_drops_and_restores_accounting(detectors, tmp_path):
+    scfg, trace, faults = _stream_inputs(12, "camera_flap")
+    cfg = StreamConfig(window_slots=8, queue_slots=8, ckpt_dir=str(tmp_path))
+    runner = _runner(detectors, scfg, "static", cfg)
+
+    # 12 slots into an 8-slot queue: 8 accepted, 4 shed and counted
+    assert runner.offer(trace, faults=faults) == 8
+    assert runner.dropped_slots == 4
+    assert any(e["kind"] == "drop" and e["slots"] == 4
+               for e in runner.events)
+    assert runner.serve() == 1
+    runner.saver.wait()
+
+    # the shed-load count is part of the serving record: it survives
+    # checkpoint/restore like everything else
+    r2 = _runner(detectors, scfg, "static", cfg)
+    assert r2.restore()
+    assert r2.dropped_slots == 4 and r2.window == 1
+    assert len(r2.logs["W"]) == 8
+    # freed queue space: a re-offer of the tail is accepted now
+    assert r2.offer(trace[r2.t_next:], faults=faults[r2.t_next:]) == 4
+
+
+def test_offer_rejects_bad_fault_shape(detectors):
+    scfg, trace, _ = _stream_inputs(8, "camera_flap")
+    runner = _runner(detectors, scfg, "static", StreamConfig(window_slots=8))
+    with pytest.raises(ValueError, match="faults mask"):
+        runner.offer(trace, faults=np.ones((len(trace), 99), bool))
+
+
+def test_stream_requires_pinned_capacity(detectors):
+    scfg = _scene_cfg()
+    s = harness.build_system(detectors, "episode", scfg, w_cap_kbps=None)
+    with pytest.raises(ValueError, match="w_cap_kbps"):
+        StreamingFleetRunner(s, DeviceScene(scfg))
+
+
+# -- soak ----------------------------------------------------------------------
+
+def test_soak_zero_recompiles_bounded_d2h(detectors):
+    """A diurnal soak stream (env-scalable; the 1000-slot version runs in
+    benchmarks/bench_serve.py): after the warmup window, ZERO episode
+    recompiles and exactly 2 harvest fetches per window — serving cost per
+    window is flat no matter how long the stream runs."""
+    slots = int(os.environ.get("REPRO_SOAK_SLOTS", "48"))
+    WIN = 8
+    scfg = _scene_cfg()
+    trace, live = make_soak_stream(slots, num_cams=scfg.num_cameras)
+
+    runner = _runner(detectors, scfg, "deepstream",
+                     StreamConfig(window_slots=WIN, queue_slots=WIN,
+                                  degrade=False))
+    # warmup: first window may compile the (method, bucket) executable
+    runner.offer(trace[:WIN], faults=live[:WIN])
+    runner.serve()
+    n0 = fleet_mod.episode_compile_count()
+    d0 = sched_mod.d2h_fetch_counts()
+
+    t = runner.t_next
+    while t < slots:
+        t += runner.offer(trace[t:t + WIN], faults=live[t:t + WIN])
+        runner.serve()
+    runner.serve(flush=True)
+
+    d1 = sched_mod.d2h_fetch_counts()
+    post_warmup = runner.window - 1
+    assert fleet_mod.episode_compile_count() == n0
+    assert d1["harvest"] - d0["harvest"] == 2 * post_warmup
+    assert d1["keep"] == d0["keep"] and d1["control"] == d0["control"]
+
+    st = runner.stats()
+    assert st["slots"] == slots and st["dropped_slots"] == 0
+    assert st["windows"] == runner.window and st["slots_per_s"] > 0
+
+
+# -- ServeEngine drain budget (admission starvation) ---------------------------
+
+def test_serve_engine_drain_budget_names_stuck_slots():
+    """Regression: an admission-starved serve loop must raise a diagnosable
+    error naming the stuck slots and the un-admitted backlog, not hang."""
+    from repro.configs import smoke_config
+    from repro.models.model import LM
+    from repro.serve.engine import Request, ServeEngine
+    cfg = smoke_config("granite-8b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    eng = ServeEngine(lm, params, batch_slots=1, max_seq=32)
+    reqs = [Request(rid=i, prompt=prompt, max_new_tokens=6)
+            for i in range(2)]
+    with pytest.raises(RuntimeError) as exc:
+        eng.run(reqs, max_steps=3)
+    msg = str(exc.value)
+    assert "did not drain in 3 steps" in msg
+    assert "1 request(s) never admitted" in msg
+    # prefill emits the first token, so 3 steps leave 4/6 emitted
+    assert "slot 0: rid=0" in msg and "emitted=4/6" in msg
+
+    # with the default budget the same load drains fine
+    eng2 = ServeEngine(lm, params, batch_slots=1, max_seq=32)
+    reqs2 = [Request(rid=i, prompt=prompt, max_new_tokens=6)
+             for i in range(2)]
+    stats = eng2.run(reqs2)
+    assert stats["requests"] == 2
