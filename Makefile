@@ -26,12 +26,19 @@
 # kill-and-resume differential (SIGTERM + injected exception, all methods,
 # zero recompiles after restore), the SLO watchdog ladder, checkpoint
 # crash-atomicity, and the bounded-queue/drain-budget regressions.
+# `ci-audit` is the STATIC lane (<2 min, nothing executes an episode): the
+# traced-scope source lint, the jaxpr invariant audit (no host callbacks in
+# timed scopes, slot-step donation, two-harvest episode outputs, fleet-size-
+# independent PRNG fold-in, method x bucket executable count), and the full
+# compiled-manifest golden check (signatures + static flops/bytes/peak
+# memory vs tests/golden/executable_manifest.json).  Runs WITHOUT fake
+# devices: the manifest pins single-device lowerings.
 # Lane pytest selections live ONCE, in tests/harness.py (LANES) — the lanes
 # shell out to it instead of duplicating test lists here.
 PY := PYTHONPATH=src python
 
 .PHONY: test bench-quick ci ci-sharded ci-guard ci-episode ci-scenarios \
-	ci-faults ci-serve
+	ci-faults ci-serve ci-audit
 
 test:
 	$(PY) -m pytest -q
@@ -59,5 +66,10 @@ ci-faults:
 ci-serve:
 	$(PY) tests/harness.py --lane serve
 
+ci-audit:
+	$(PY) -m repro.analysis.lint
+	$(PY) -m repro.analysis.jaxpr_audit --quiet
+	REPRO_AUDIT_FULL=1 $(PY) tests/harness.py --lane audit
+
 ci: test bench-quick ci-sharded ci-guard ci-episode ci-scenarios ci-faults \
-	ci-serve
+	ci-serve ci-audit

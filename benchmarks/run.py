@@ -27,6 +27,7 @@ BENCHES = [
     "bench_kernels",      # kernel vs oracle timings
     "bench_serve",        # continuous-serving SLO (window p50/p99, slots/s)
     "bench_roofline",     # dry-run roofline table (reads artifacts/dryrun)
+    "bench_static_cost",  # compile-time flops/bytes/peak per executable
 ]
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"

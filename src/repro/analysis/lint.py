@@ -1,0 +1,292 @@
+"""Traced-scope source lint — AST-only, no imports of the linted code.
+
+Enforces the repo tracing rules inside the registered traced scopes
+(``TRACED_SCOPES``; see the package docstring for the rule catalog and
+the ``# audit: allow(<rule>)`` pragma grammar):
+
+* ``host-sync`` — ``.item()`` / ``float()`` / ``int()`` / ``np.asarray``
+  / ``jax.device_get`` / ``block_until_ready`` inside a traced scope;
+* ``traced-branch`` — Python ``if``/``while`` on a value produced by a
+  ``jnp``/``jax``/``lax`` call in the same scope;
+* ``unseeded-rng`` — global-state RNG (``np.random.<dist>``, seedless
+  ``np.random.default_rng()``, stdlib ``random.*``).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis.lint [paths...]
+
+Lints ``src/repro`` by default; prints ``path:line: rule-id: message``
+per finding and exits non-zero if any survive their pragmas.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Set, Union
+
+RULES = ("host-sync", "traced-branch", "unseeded-rng")
+
+# repo-relative (to src/repro) path -> traced function names, or "*" for a
+# wholly-traced module.  Functions listed here either trace under jit or
+# sit close enough to the timed path that any host sync inside them must
+# carry an explicit `# audit: allow(host-sync)` justification.
+TRACED_SCOPES: Dict[str, Union[str, Set[str]]] = {
+    "core/fleet.py": {
+        "_key_chain", "slot_camera_keys", "_linspace_sel", "keep_selection",
+        "_slot_step", "_reducto_keep_impl", "_control_impl", "_episode_impl",
+    },
+    "core/elastic.py": {"init_state_jax", "update_jax", "update_scan"},
+    "core/codec.py": "*",
+    "core/scheduler.py": {"run_episode"},
+    "core/utility.py": {"predict", "predict_grid", "utility_table", "fit"},
+    "core/allocation.py": {
+        "allocate_dp_jax", "allocate_greedy_jax", "allocate_fair_jax",
+        "build_utility_table",
+    },
+    "serve/stream.py": {"_dispatch_window"},
+}
+
+_PRAGMA_RE = re.compile(r"#\s*audit:\s*allow\(([a-z-]+)\)")
+
+# call roots whose results count as traced values for `traced-branch`
+_TRACED_ROOTS = {"jnp", "jax", "lax"}
+# numpy module aliases for the host-sync / rng rules
+_NUMPY_ROOTS = {"np", "numpy"}
+
+
+class Finding(NamedTuple):
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+def _attr_chain(node: ast.AST) -> List[str]:
+    """`np.random.normal` -> ["np", "random", "normal"] (best effort)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts[::-1]
+
+
+def _pragma_lines(source: str) -> Dict[int, Set[str]]:
+    """1-based line -> rule ids allowed on that line."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        for m in _PRAGMA_RE.finditer(line):
+            out.setdefault(i, set()).add(m.group(1))
+    return out
+
+
+class _ScopeLinter(ast.NodeVisitor):
+    """Lint one traced function body (or module when the registry marks
+    the whole file)."""
+
+    def __init__(self, path: str, findings: List[Finding]) -> None:
+        self.path = path
+        self.findings = findings
+        self.traced_names: Set[str] = set()
+
+    # -- traced-name dataflow (single forward pass, good enough for the
+    # straight-line impls the registry tracks) -------------------------------
+
+    def _is_traced_expr(self, node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                chain = _attr_chain(sub.func)
+                if chain and chain[0] in _TRACED_ROOTS:
+                    return True
+            elif isinstance(sub, ast.Name) and sub.id in self.traced_names:
+                return True
+        return False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self._is_traced_expr(node.value):
+            for tgt in node.targets:
+                for sub in ast.walk(tgt):
+                    if isinstance(sub, ast.Name):
+                        self.traced_names.add(sub.id)
+        self.generic_visit(node)
+
+    # -- rules ----------------------------------------------------------------
+
+    def _add(self, node: ast.AST, rule: str, msg: str) -> None:
+        self.findings.append(Finding(self.path, node.lineno, rule, msg))
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        dotted = ".".join(chain)
+        # host-sync -----------------------------------------------------------
+        if chain and chain[-1] == "item" and isinstance(node.func,
+                                                        ast.Attribute):
+            self._add(node, "host-sync",
+                      ".item() blocks on a device value in a traced scope")
+        elif dotted in ("float", "int") and node.args and not isinstance(
+                node.args[0], ast.Constant):
+            self._add(node, "host-sync",
+                      f"{dotted}() concretizes its argument (host sync on "
+                      "device values, trace error on tracers)")
+        elif chain[:1] and chain[0] in _NUMPY_ROOTS and dotted.endswith(
+                ".asarray"):
+            self._add(node, "host-sync",
+                      f"{dotted} materializes on host inside a traced scope")
+        elif dotted in ("jax.device_get",):
+            self._add(node, "host-sync", "jax.device_get is a device fetch")
+        elif chain and chain[-1] == "block_until_ready":
+            self._add(node, "host-sync",
+                      "block_until_ready synchronizes with the device")
+        # unseeded-rng --------------------------------------------------------
+        if len(chain) >= 2 and chain[0] in _NUMPY_ROOTS and chain[1] == "random":
+            if chain[-1] == "default_rng":
+                if not node.args:
+                    self._add(node, "unseeded-rng",
+                              "np.random.default_rng() without a seed")
+            else:
+                self._add(node, "unseeded-rng",
+                          f"{dotted} draws from numpy's global RNG state")
+        elif len(chain) == 2 and chain[0] == "random":
+            self._add(node, "unseeded-rng",
+                      f"stdlib {dotted} draws from global RNG state")
+        self.generic_visit(node)
+
+    def _check_branch(self, node, kind: str) -> None:
+        if self._is_traced_expr(node.test):
+            self._add(node, "traced-branch",
+                      f"Python {kind} on a traced value — use jnp.where / "
+                      "lax.cond (host branching concretizes the tracer)")
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_branch(node, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_branch(node, "while")
+        self.generic_visit(node)
+
+
+def _iter_scopes(tree: ast.Module, spec: Union[str, Set[str]]
+                 ) -> Iterable[ast.AST]:
+    """The AST nodes to lint: the module itself for "*", else each
+    (possibly nested / method) def whose name is registered."""
+    if spec == "*":
+        yield tree
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name in spec:
+            yield node
+
+
+def _function_pragmas(tree: ast.Module, source: str) -> Dict[str, Set[str]]:
+    """def name -> rules allowed for the WHOLE function (pragma on, or on
+    the line directly above, the def line)."""
+    pragmas = _pragma_lines(source)
+    out: Dict[str, Set[str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            allowed: Set[str] = set()
+            for ln in range(node.lineno - 1,
+                            node.body[0].lineno if node.body else node.lineno):
+                allowed |= pragmas.get(ln, set())
+            if allowed:
+                out[node.name] = allowed
+    return out
+
+
+def lint_source(source: str, path: str,
+                spec: Union[str, Set[str]]) -> List[Finding]:
+    """Lint one file's source against a scope spec; pragma-suppressed
+    findings are dropped."""
+    tree = ast.parse(source, filename=path)
+    pragmas = _pragma_lines(source)
+    fn_pragmas = _function_pragmas(tree, source)
+
+    # map each line to its enclosing registered def (for def-line pragmas)
+    def enclosing_allow(finding: Finding) -> Set[str]:
+        allowed = (pragmas.get(finding.line, set())
+                   | pragmas.get(finding.line - 1, set()))
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in fn_pragmas:
+                end = getattr(node, "end_lineno", node.lineno)
+                if node.lineno <= finding.line <= end:
+                    allowed |= fn_pragmas[node.name]
+        return allowed
+
+    findings: List[Finding] = []
+    seen: Set[int] = set()
+    for scope in _iter_scopes(tree, spec):
+        if id(scope) in seen:       # nested registered defs
+            continue
+        seen.add(id(scope))
+        linter = _ScopeLinter(path, findings)
+        linter.visit(scope)
+    uniq = sorted(set(findings), key=lambda f: (f.line, f.rule, f.message))
+    return [f for f in uniq if f.rule not in enclosing_allow(f)]
+
+
+def lint_file(path: Path, spec: Union[str, Set[str]]) -> List[Finding]:
+    return lint_source(path.read_text(), str(path), spec)
+
+
+def lint_tree(src_root: Optional[Path] = None,
+              scopes: Optional[Dict[str, Union[str, Set[str]]]] = None
+              ) -> List[Finding]:
+    """Lint every registered file under ``src/repro`` (the default root)."""
+    if src_root is None:
+        src_root = Path(__file__).resolve().parents[1]
+    scopes = TRACED_SCOPES if scopes is None else scopes
+    findings: List[Finding] = []
+    for rel, spec in sorted(scopes.items()):
+        p = src_root / rel
+        if not p.exists():
+            findings.append(Finding(str(p), 0, "host-sync",
+                                    "registered traced-scope file missing "
+                                    "(update lint.TRACED_SCOPES)"))
+            continue
+        findings.extend(lint_file(p, spec))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="files to lint with their registered scope "
+                         "(default: every registered file)")
+    args = ap.parse_args(argv)
+    if args.paths:
+        findings = []
+        root = Path(__file__).resolve().parents[1]
+        for raw in args.paths:
+            p = Path(raw).resolve()
+            rel = str(p.relative_to(root)) if p.is_relative_to(root) else raw
+            spec = TRACED_SCOPES.get(rel.replace("\\", "/"))
+            if spec is None:
+                print(f"note: {raw} has no registered traced scopes; "
+                      "linting whole module")
+                spec = "*"
+            findings.extend(lint_file(p, spec))
+    else:
+        findings = lint_tree()
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"lint: {len(findings)} violation(s) in traced scopes "
+              "(fix, hoist out of the traced scope, or justify with "
+              "`# audit: allow(<rule>)`)")
+        return 1
+    print("lint: traced scopes clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,194 @@
+"""Executable manifest: one canonical JSON fingerprint per audited
+program, pinned at ``tests/golden/executable_manifest.json``.
+
+Per executable the manifest records
+
+* ``signature`` — sha256 over (name, flattened arg avals, flattened out
+  avals, donated leaf indices): the jit signature.  ANY drift here means
+  the runtime would retrace/recompile where the suites assert zero
+  mid-suite recompiles — the audit lane fails before an episode runs;
+* ``args`` / ``outs`` — the flattened shape/dtype lists themselves (so a
+  drift failure can name the changed aval, not just the hash);
+* ``donated`` — donated flattened-arg indices from ``lowered.args_info``;
+* ``cost`` — static flops / bytes-accessed / transcendentals from the
+  compiled executable's ``cost_analysis()`` (XLA's static model — the
+  same numbers ``launch/dryrun.py`` rooflines against);
+* ``memory`` — argument/output/temp/alias bytes + the derived peak
+  estimate from ``memory_analysis()``.
+
+Nothing executes: programs are lowered from abstract
+``ShapeDtypeStruct`` args and compiled; no episode, slot or kernel runs.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis.manifest --check   # default
+    PYTHONPATH=src python -m repro.analysis.manifest --write
+
+Regenerate with ``--write`` ONLY on an intentional executable change
+(new statics, signature or cost-model shift) and call it out in the PR.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import sys
+import warnings
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.analysis.programs import Program, get_programs
+
+ROOT = Path(__file__).resolve().parents[3]
+MANIFEST_PATH = ROOT / "tests" / "golden" / "executable_manifest.json"
+
+# cost_analysis keys worth pinning (the rest are backend noise)
+_COST_KEYS = ("flops", "bytes accessed", "transcendentals")
+
+
+def _aval_str(x) -> str:
+    try:
+        import jax.numpy as jnp
+        dt = jnp.result_type(x)
+    except Exception:           # pragma: no cover - defensive
+        dt = getattr(x, "dtype", "?")
+    shape = "x".join(str(d) for d in getattr(x, "shape", ()))
+    return f"{dt}[{shape}]"
+
+
+def lower_program(prog: Program):
+    """One warning-suppressed AOT lowering (CPU warns that donated
+    slot-step buffers are unusable; the donation *marking* is the
+    contract being audited)."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message=".*donated buffers were not usable.*")
+        return prog.fn.lower(*prog.abs_args)
+
+
+def compiled_stats(compiled) -> Dict[str, Dict[str, Any]]:
+    """Normalized cost/memory fields of a compiled executable — shared by
+    the manifest rows and ``benchmarks/bench_static_cost.py`` so both pin
+    the same numbers."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # CPU returns a 1-list
+        cost = cost[0] if cost else {}
+    mem = compiled.memory_analysis()
+    return {
+        "cost": {k.replace(" ", "_"): float(cost.get(k, 0.0))
+                 for k in _COST_KEYS},
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_estimate_bytes": int(
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+        },
+    }
+
+
+def build_entry(prog: Program, compile_programs: bool = True
+                ) -> Dict[str, Any]:
+    """Lower (and optionally compile) one program into its manifest row."""
+    import jax
+    lowered = lower_program(prog)
+    info = jax.tree.leaves(
+        lowered.args_info, is_leaf=lambda x: hasattr(x, "donated"))
+    args = [_aval_str(a) for a in info]
+    donated = [i for i, a in enumerate(info) if a.donated]
+    outs = [_aval_str(av) for av in
+            jax.tree.leaves(jax.eval_shape(prog.fn, *prog.abs_args))]
+    sig = hashlib.sha256(json.dumps(
+        [prog.name, args, outs, donated]).encode()).hexdigest()[:16]
+    entry: Dict[str, Any] = {
+        "kind": prog.kind, "signature": sig, "args": args, "outs": outs,
+        "donated": donated,
+    }
+    if compile_programs:
+        entry.update(compiled_stats(lowered.compile()))
+    return entry
+
+
+def build_manifest(programs: Optional[Sequence[Program]] = None,
+                   compile_programs: bool = True) -> Dict[str, Any]:
+    import jax
+    programs = get_programs() if programs is None else tuple(programs)
+    return {
+        "comment": ("Pinned executable fingerprints; regenerate ONLY via "
+                    "`python -m repro.analysis.manifest --write` on an "
+                    "intentional program change, and say so in the PR"),
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "executables": {p.name: build_entry(p, compile_programs)
+                        for p in programs},
+    }
+
+
+def diff_manifests(golden: Dict[str, Any], current: Dict[str, Any],
+                   names: Optional[Sequence[str]] = None) -> List[str]:
+    """Field-level drift report: each line names the executable and the
+    changed field (the satellite contract for actionable failures)."""
+    drift: List[str] = []
+    g, c = golden.get("executables", {}), current.get("executables", {})
+    names = sorted(set(g) | set(c)) if names is None else list(names)
+    for name in names:
+        if name not in g:
+            drift.append(f"{name}: not in committed golden (new executable "
+                         "— regenerate via --write and call it out)")
+            continue
+        if name not in c:
+            drift.append(f"{name}: missing from current build (executable "
+                         "removed or registry drifted)")
+            continue
+        ge, ce = g[name], c[name]
+        for field in ce:
+            if field not in ge:
+                drift.append(f"{name}: field {field!r} absent from golden")
+            elif ge[field] != ce[field]:
+                drift.append(
+                    f"{name}: field {field!r} drifted: golden "
+                    f"{ge[field]!r} != current {ce[field]!r}")
+    return drift
+
+
+def load_golden(path: Path = MANIFEST_PATH) -> Dict[str, Any]:
+    return json.loads(path.read_text())
+
+
+def write_manifest(path: Path = MANIFEST_PATH) -> Path:
+    doc = build_manifest()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the committed golden manifest")
+    ap.add_argument("--check", action="store_true",
+                    help="verify the live executables against the golden "
+                         "(default action)")
+    args = ap.parse_args(argv)
+    if args.write:
+        print(f"wrote {write_manifest()}")
+        return 0
+    if not MANIFEST_PATH.exists():
+        print(f"FAIL  no golden manifest at {MANIFEST_PATH} — run "
+              "`python -m repro.analysis.manifest --write`")
+        return 1
+    drift = diff_manifests(load_golden(), build_manifest())
+    for d in drift:
+        print(f"DRIFT  {d}")
+    if drift:
+        print(f"manifest check: {len(drift)} drifted field(s); if "
+              "intentional, regenerate via --write and say so in the PR")
+        return 1
+    print(f"manifest check: all executables match {MANIFEST_PATH.name}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

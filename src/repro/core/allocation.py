@@ -107,6 +107,7 @@ def trace_capacity(bitrates: Sequence[int], trace_kbps, num_cams: int, *,
     return dp_capacity(bitrates, W_max)
 
 
+# audit: allow(host-sync) host allocator's table; the device loop uploads once
 def build_utility_table(mlp_params, a: np.ndarray, c: np.ndarray,
                         bitrates: Sequence[int], resolutions: Sequence[float],
                         weights: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -199,8 +200,8 @@ def allocate_dp_jax(util: jax.Array, best_res: jax.Array,
     bitr, d = _grid(bitrates)
     costs = (bitr // d).astype(np.int32)
     I, J = util.shape
-    jmin = int(np.argmin(costs))
-    cmin = int(costs[jmin])
+    jmin = int(np.argmin(costs))  # audit: allow(host-sync) static numpy grid
+    cmin = int(costs[jmin])       # audit: allow(host-sync) trace-time constant
     assert cmin * I <= w_cap, (
         f"w_cap={w_cap} cannot express the all-minimum clamp for {I} cameras "
         f"(needs >= {cmin * I}); raise dp_capacity's W_max")

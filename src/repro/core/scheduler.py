@@ -663,6 +663,7 @@ class DeepStreamSystem:
         self._key = out.key
         self.last_carry = EpisodeCarry(
             est=out.est, ref=out.ref,
+            # audit: allow(host-sync) host-input faults mask, after dispatch
             live_prev=(np.asarray(faults[-1], bool) if faults is not None
                        else np.ones(C, bool)),
             t_first=(carry.t_first if carry is not None else t_begin))
@@ -677,6 +678,7 @@ class DeepStreamSystem:
             "utility": packs[:, 0] @ lam,
             "mean_f1": packs[:, 0].mean(axis=1),
             "bytes": packs[:, 1].sum(axis=1),
+            # audit: allow(host-sync) host-input trace echo, post-harvest
             "W": np.asarray(trace_kbps, float),
             "extra": cpacks[:, 0].astype(float),
             "area": cpacks[:, 1].astype(float),

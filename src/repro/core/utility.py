@@ -110,4 +110,5 @@ def fit(params, features: np.ndarray, targets: np.ndarray, *,
     loss = None
     for _ in range(steps):
         params, opt, loss = step(params, opt)
+    # audit: allow(host-sync) ONE designed sync at fit() end, after the loop
     return params, float(loss)

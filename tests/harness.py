@@ -55,6 +55,9 @@ LANES = {
         "tests/test_serve_stream.py",
         "tests/test_ckpt.py",
     ],
+    "audit": [
+        "tests/test_audit.py",
+    ],
 }
 
 METHODS = ("deepstream", "jcab", "reducto", "static")
