@@ -33,12 +33,25 @@
 # compiled-manifest golden check (signatures + static flops/bytes/peak
 # memory vs tests/golden/executable_manifest.json).  Runs WITHOUT fake
 # devices: the manifest pins single-device lowerings.
+# `ci-chaos` is the seeded chaos lane: the deterministic fault-injection
+# soak (ft/chaos.py) replays a scheduled storm — checkpoint bit-flips,
+# truncation, torn manifests, save latency, source stalls/timeouts,
+# mid-window exceptions, SIGTERM, duplicate/out-of-order/gap delivery and
+# poisoned bandwidth records — against the windowed stream runner behind
+# the hardened ingest path (serve/ingest.py).  Asserts the recovered logs
+# match the fault-free run to <= 1e-5 for all four methods with ZERO
+# episode recompiles after recovery, exact quarantine/gap-fill accounting,
+# and that restore demonstrably falls back past corrupted newest
+# generations to the newest valid one.  REPRO_CHAOS_HEADLINE_SLOTS=1000
+# additionally enables the 1000-slot headline soak (retention-bounded
+# checkpoint store + peak-RSS ceiling).  Runs WITHOUT fake devices, like
+# ci-serve.
 # Lane pytest selections live ONCE, in tests/harness.py (LANES) — the lanes
 # shell out to it instead of duplicating test lists here.
 PY := PYTHONPATH=src python
 
 .PHONY: test bench-quick ci ci-sharded ci-guard ci-episode ci-scenarios \
-	ci-faults ci-serve ci-audit
+	ci-faults ci-serve ci-audit ci-chaos
 
 test:
 	$(PY) -m pytest -q
@@ -71,5 +84,8 @@ ci-audit:
 	$(PY) -m repro.analysis.jaxpr_audit --quiet
 	REPRO_AUDIT_FULL=1 $(PY) tests/harness.py --lane audit
 
+ci-chaos:
+	REPRO_CHAOS_HEADLINE_SLOTS=1000 $(PY) tests/harness.py --lane chaos
+
 ci: test bench-quick ci-sharded ci-guard ci-episode ci-scenarios ci-faults \
-	ci-serve ci-audit
+	ci-serve ci-audit ci-chaos

@@ -1,13 +1,18 @@
 """Continuous-serving SLO bench: window turnaround over a diurnal soak.
 
 Drives ``serve.stream.StreamingFleetRunner`` over the 1000-slot diurnal
-soak stream (``data.scenarios.make_soak_stream``; reduced in ``--quick``),
-feeding one window per iteration exactly like the launch driver, and
-reports the serving SLO summary: p50/p99 window turnaround, sustained
-slots/sec, plus the always-on invariants — ZERO episode recompiles after
-the warmup window and exactly 2 'harvest' D2H fetches per window (the cost
-per window is flat no matter how long the stream runs).  The headline and
-a trajectory entry land in ``artifacts/bench/BENCH_trajectory.json`` so
+soak stream (``data.scenarios.make_soak_stream``; reduced in ``--quick``)
+THROUGH the hardened ingest stage (``serve.ingest.StreamIngestor`` over a
+line-protocol replay source — the bench now measures the same parse ->
+quarantine -> sequence path a real deployment serves), and reports the
+serving SLO summary: p50/p99 window turnaround, sustained slots/sec, plus
+the always-on invariants — ZERO episode recompiles after the warmup window
+and exactly 2 'harvest' D2H fetches per window (the cost per window is
+flat no matter how long the stream runs) — and the robustness counters
+(load-shed ``dropped_slots``, quarantined / gap-filled / duplicate /
+out-of-order slots; all zero on the clean soak, and part of the trajectory
+so an accounting regression is visible across PRs).  The headline and a
+trajectory entry land in ``artifacts/bench/BENCH_trajectory.json`` so
 serving-throughput regressions are visible across PRs.
 """
 from __future__ import annotations
@@ -47,24 +52,27 @@ def _build_runner(method: str):
 
 def run(quick: bool = False) -> dict:
     from repro.data.scenarios import SOAK_SLOTS, make_soak_stream
+    from repro.serve.ingest import (ListSource, StreamIngestor,
+                                    format_record)
 
     slots = 96 if quick else SOAK_SLOTS
     method = "deepstream"
     runner, scene_cfg = _build_runner(method)
     trace, live = make_soak_stream(slots, num_cams=scene_cfg.num_cameras)
 
+    # the soak stream as line-protocol records: the bench serves through
+    # the full hardened ingest path, not the trusted in-process offer()
+    lines = [format_record(t, trace[t], live[t]) for t in range(slots)]
+    ingestor = StreamIngestor(runner,
+                              ListSource(lines, batch=WINDOW_SLOTS))
+
     # warmup window: compiles the (method, bucket) episode executable
-    t = runner.offer(trace[:WINDOW_SLOTS], faults=live[:WINDOW_SLOTS])
-    runner.serve()
+    ingestor.pump(until_t=WINDOW_SLOTS)
     n_compiles0 = fleet_mod.episode_compile_count()
     d0 = sched_mod.d2h_fetch_counts()
     warmup_windows = runner.window
 
-    while t < slots:
-        t += runner.offer(trace[t:t + WINDOW_SLOTS],
-                          faults=live[t:t + WINDOW_SLOTS])
-        runner.serve()
-    runner.serve(flush=True)
+    ingestor.pump(until_t=slots, flush=True)
 
     d1 = sched_mod.d2h_fetch_counts()
     timed_windows = runner.window - warmup_windows
@@ -86,6 +94,11 @@ def run(quick: bool = False) -> dict:
         "window_slots": WINDOW_SLOTS,
         "windows": int(runner.window),
         "dropped_slots": int(runner.dropped_slots),
+        "quarantined_slots": int(runner.quarantined_slots),
+        "quarantined": dict(runner.quarantined),
+        "gap_filled_slots": int(runner.gap_filled_slots),
+        "duplicates": int(runner.duplicates),
+        "out_of_order": int(runner.out_of_order),
         "p50_window_s": p50,
         "p99_window_s": p99,
         "slots_per_s": slots_per_s,
@@ -107,6 +120,9 @@ def run(quick: bool = False) -> dict:
             "slots_per_s": slots_per_s,
             "recompiles_after_warmup": int(recompiles),
             "harvest_fetches_per_window": harvest_per_window,
+            "dropped_slots": int(runner.dropped_slots),
+            "quarantined_slots": int(runner.quarantined_slots),
+            "gap_filled_slots": int(runner.gap_filled_slots),
         },
     }
     return result

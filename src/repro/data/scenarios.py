@@ -325,3 +325,66 @@ def make_faults(name: str, num_slots: int, num_cams: int,
         raise ValueError(f"fault family {name!r} broke the liveness "
                          f"contract: dtype {live.dtype}, shape {live.shape}")
     return live
+
+
+# -- chaos schedules ----------------------------------------------------------
+
+def make_chaos_schedule(num_slots: int, window_slots: int = 8, seed: int = 0,
+                        poisoned: bool = False) -> Dict[str, Dict]:
+    """The canonical chaos-soak schedule, pure in every argument (plain
+    dicts — ``ft.chaos.SiteSpec.of`` accepts them; data/ stays below ft/ in
+    the layering).  Scales its fault positions to the stream: windows are
+    ``num_slots // window_slots`` and each crash/corruption pair lands at a
+    distinct window fraction.
+
+    The default (``poisoned=False``) schedule uses only VALUE-PRESERVING
+    recoverable sites — 8 families spanning checkpoint corruption, save
+    latency, source stalls/timeouts, mid-window crashes, and
+    duplicate/out-of-order delivery — so a chaos run's concatenated logs
+    must match the fault-free run <= 1e-5 (the headline differential).
+    Corruption/crash pairing: ``ckpt.bitflip`` (and ``ckpt.torn_manifest``)
+    corrupt the generation committed at save-step w, and ``serve.exception``
+    crashes at window w BEFORE any newer save — restore must demonstrably
+    skip the corrupted latest generation and fall back.
+
+    ``poisoned=True`` adds the four accounting-only sites (``ingest.gap`` /
+    ``nan`` / ``negative`` / ``absurd``): those slots gap-fill by declared
+    policy, so logs diverge by design and the contract becomes exact
+    quarantine/gap accounting + finite logs (12 families total)."""
+    T = int(num_slots)
+    W = max(4, T // int(window_slots))
+    w1 = max(1, W // 4)              # bitflip + exception (fallback demo)
+    w2 = max(w1 + 1, W // 2)         # truncate (healed by the next save)
+    w3 = max(w2 + 1, (3 * W) // 4)   # torn manifest + exception
+    w4 = max(w3 + 1, W - 1)          # SIGTERM (preemption save path)
+    rng = _rng("chaos_schedule", seed)
+    # one DISJOINT slot pool split across the delivery/value sites: a slot
+    # hit by two ingest faults at once would make the per-site accounting
+    # the chaos tests assert ("quarantined slots accounted exactly")
+    # ambiguous
+    per = max(2, T // 100)
+    pool = rng.choice(T, size=min(T, per * 6), replace=False)
+    dup, oo = pool[:per], pool[per:2 * per]
+    sched: Dict[str, Dict] = {
+        "ckpt.bitflip": {"at": [w1]},
+        "ckpt.truncate": {"at": [w2]},
+        "ckpt.torn_manifest": {"at": [w3]},
+        "ckpt.save_latency": {"at": [max(1, w1 - 1)], "mag": 0.01},
+        # early poll ordinals: they must land before the first crash so
+        # every family fires even on the shortest (48-slot) soak
+        "source.stall": {"at": [3]},
+        "source.timeout": {"at": [2]},
+        "serve.exception": {"at": [w1, w3]},
+        "serve.sigterm": {"at": [w4]},
+        "ingest.duplicate": {"at": sorted(int(t) for t in dup)},
+        "ingest.reorder": {"at": sorted(int(t) for t in oo)},
+    }
+    if poisoned:
+        q = np.array_split(pool[2 * per:], 4)
+        sched.update({
+            "ingest.gap": {"at": sorted(int(t) for t in q[0])},
+            "ingest.nan": {"at": sorted(int(t) for t in q[1])},
+            "ingest.negative": {"at": sorted(int(t) for t in q[2])},
+            "ingest.absurd": {"at": sorted(int(t) for t in q[3])},
+        })
+    return sched

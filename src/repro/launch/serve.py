@@ -11,7 +11,13 @@ restore from the latest committed checkpoint and continue)::
 
     PYTHONPATH=src python -m repro.launch.serve --fleet-stream \
         --stream-slots 64 --window-slots 8 --method deepstream \
-        --ckpt-dir artifacts/serve_ckpt
+        --ckpt-dir artifacts/serve_ckpt --ckpt-keep 8
+
+``--source`` switches ingest from the in-process soak stream to a hardened
+real source (``serve.ingest``: quarantine lane + slot sequencing +
+read backoff): ``--source file:/path/to/stream.txt`` tails a line-protocol
+file; ``--source host:port`` reads the same protocol over TCP.  The fleet
+expects one ``"<t> <kbps> <live-bits>"`` record per slot.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ def run_fleet_stream(args) -> None:
     from repro.core.scheduler import DeepStreamSystem, SystemConfig
     from repro.data.scenarios import make_soak_stream
     from repro.data.synthetic import DeviceScene, SceneConfig
+    from repro.serve import ingest as ingest_mod
     from repro.serve.stream import StreamConfig, StreamingFleetRunner
     from repro.train.detector_train import train_detector
 
@@ -47,17 +54,28 @@ def run_fleet_stream(args) -> None:
     runner = StreamingFleetRunner(
         system, DeviceScene(scene_cfg), method=args.method,
         cfg=StreamConfig(window_slots=args.window_slots,
-                         ckpt_dir=args.ckpt_dir,
+                         ckpt_dir=args.ckpt_dir, ckpt_keep=args.ckpt_keep,
                          install_signal=args.ckpt_dir is not None))
     with runner:
         if runner.restore():
             print(f"# restored window={runner.window} t_next={runner.t_next}")
-        t = runner.t_next
-        while t < len(trace):
-            t += runner.offer(trace[t:t + args.window_slots],
-                              faults=live[t:t + args.window_slots])
-            runner.serve()
-        runner.serve(flush=True)
+        if args.source:
+            # hardened path: parse -> quarantine -> sequence -> offer
+            if args.source.startswith("file:"):
+                src = ingest_mod.FileTailSource(args.source[len("file:"):])
+            else:
+                host, _, port = args.source.rpartition(":")
+                src = ingest_mod.SocketLineSource(host or "127.0.0.1",
+                                                  int(port))
+            ing = ingest_mod.StreamIngestor(runner, src)
+            ing.pump(until_t=args.stream_slots, flush=True)
+        else:
+            t = runner.t_next
+            while t < len(trace):
+                t += runner.offer(trace[t:t + args.window_slots],
+                                  faults=live[t:t + args.window_slots])
+                runner.serve()
+            runner.serve(flush=True)
         print({k: round(v, 4) if isinstance(v, float) else v
                for k, v in runner.stats().items()})
 
@@ -78,6 +96,12 @@ def main() -> None:
     ap.add_argument("--window-slots", type=int, default=8)
     ap.add_argument("--method", default="deepstream")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-keep", type=int, default=None,
+                    help="retention: keep the newest N checkpoint "
+                         "generations (never the newest valid one)")
+    ap.add_argument("--source", default=None,
+                    help="hardened ingest source: file:PATH (tail a "
+                         "line-protocol file) or HOST:PORT (TCP)")
     args = ap.parse_args()
 
     if args.fleet_stream:

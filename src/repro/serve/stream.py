@@ -24,8 +24,11 @@ the shape a real fleet service runs:
 
   * **Checkpoints.**  At each window boundary the carry pytree + the run
     key + host counters checkpoint via ``ckpt.AsyncSaver`` (atomic commit:
-    a crash mid-save can only ever leave an uncommitted directory behind,
-    and restore falls back to ``latest_committed``).  A
+    a crash mid-save can only ever leave an uncommitted directory behind;
+    every leaf carries a content checksum, and ``restore`` falls back
+    through generation history past corrupt generations to the newest one
+    that VERIFIES — see ``ckpt.checkpoint``; ``ckpt_keep`` bounds retention
+    without ever deleting the newest valid generation).  A
     ``ft.PreemptionCheckpointer`` turns SIGTERM/SIGINT into save-now +
     clean exit.  The kill-and-resume differential
     (tests/test_serve_stream.py): interrupt mid-stream, restart, restore,
@@ -91,13 +94,16 @@ class StreamConfig:
     otherwise — correct, but pads every window); ``queue_slots`` bounds the
     ingest buffer (overflow drops, counted); ``ckpt_dir=None`` disables
     checkpointing (pure in-memory serving); ``ckpt_every`` is in windows;
-    ``install_signal`` wires SIGTERM/SIGINT into save-now-and-exit
+    ``ckpt_keep`` bounds generation retention (keep-last-N, never deleting
+    the newest VALID generation — see ``ckpt.gc_generations``; None keeps
+    all); ``install_signal`` wires SIGTERM/SIGINT into save-now-and-exit
     (``ft.PreemptionCheckpointer``); ``recover_after`` healthy windows
     climb one ladder rung back up."""
     window_slots: int = 8
     queue_slots: int = 64
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 1
+    ckpt_keep: Optional[int] = None
     degrade: bool = True
     recover_after: int = 3
     install_signal: bool = False
@@ -111,13 +117,17 @@ class StreamingFleetRunner:
     ``wall_hook(window, wall_s) -> wall_s`` post-processes the measured
     window turnaround before the watchdog sees it (tests inject straggler
     windows); ``fault_hook(window=, rung=)`` runs right before each window
-    dispatch and may raise (tests inject mid-stream crashes)."""
+    dispatch and may raise (tests inject mid-stream crashes); ``chaos`` is
+    an optional ``ft.chaos.ChaosEngine`` — its ``pre_window`` fires before
+    each window (exception / SIGTERM sites) and its checkpoint sites thread
+    into the saver (save latency, post-commit corruption)."""
 
     def __init__(self, system: DeepStreamSystem, scene: DeviceScene,
                  method: str = "deepstream", cfg: Optional[StreamConfig] = None,
                  use_elastic: Optional[bool] = None,
                  wall_hook: Optional[Callable[[int, float], float]] = None,
-                 fault_hook: Optional[Callable[..., None]] = None):
+                 fault_hook: Optional[Callable[..., None]] = None,
+                 chaos: Optional[Any] = None):
         cfg = cfg if cfg is not None else StreamConfig()
         if not system.cfg.episode:
             raise ValueError("StreamingFleetRunner needs an episode-mode "
@@ -140,6 +150,7 @@ class StreamingFleetRunner:
                             else use_elastic)
         self.wall_hook = wall_hook
         self.fault_hook = fault_hook
+        self.chaos = chaos
         C = system.cfg.scene.num_cameras
         self._C = C
         self.carry: Optional[EpisodeCarry] = None
@@ -147,12 +158,19 @@ class StreamingFleetRunner:
         self.dropped_slots = 0               # ingest-queue overflow
         self.rung = 0                        # ladder position
         self.ok_streak = 0                   # consecutive healthy windows
+        # ingest-hardening counters (fed by serve.ingest via note_ingest);
+        # checkpointed with the carry so accounting survives restarts
+        self.quarantined: Dict[str, int] = {}
+        self.quarantined_slots = 0
+        self.gap_filled_slots = 0
+        self.duplicates = 0
+        self.out_of_order = 0
         self.logs: Dict[str, List[float]] = {k: [] for k in LOG_KEYS}
         self.window_walls: List[float] = []  # turnaround per served window
         self.events: List[Dict[str, Any]] = []
         self._queue: Deque[Tuple[float, np.ndarray]] = deque()
         self.watchdog = Watchdog(cfg.watchdog)
-        self.saver = ckpt.AsyncSaver()
+        self.saver = ckpt.AsyncSaver(keep=cfg.ckpt_keep, chaos=chaos)
         self.checkpointer = PreemptionCheckpointer(
             self._checkpoint, every=max(1, cfg.ckpt_every),
             install_signal=cfg.install_signal)
@@ -168,13 +186,39 @@ class StreamingFleetRunner:
     def queued_slots(self) -> int:
         return len(self._queue)
 
+    def note_ingest(self, kind: str, **info: Any) -> None:
+        """Ingest-stage accounting hook (``serve.ingest`` calls this for
+        every quarantine / dedupe / reorder / gap-fill decision): bumps the
+        counters and appends an event — the runner's event log is the
+        single serving record."""
+        if kind == "quarantine":
+            reason = str(info.get("reason", "unknown"))
+            self.quarantined[reason] = self.quarantined.get(reason, 0) + 1
+            self.quarantined_slots += 1
+        elif kind == "gap_fill":
+            self.gap_filled_slots += 1
+        elif kind == "duplicate":
+            self.duplicates += 1
+        elif kind == "out_of_order":
+            self.out_of_order += 1
+        self.events.append({"kind": kind, **info})
+
     def offer(self, trace_kbps: np.ndarray,
               faults: Optional[np.ndarray] = None) -> int:
         """Enqueue incoming slots; returns how many were ACCEPTED.  Slots
         beyond the bounded queue's free space are dropped and counted in
         ``dropped_slots`` — explicit load shedding, the always-on service's
-        answer to input outpacing service rate."""
+        answer to input outpacing service rate.  Rejects non-finite or
+        negative bandwidth outright (ValueError): the hardened path is
+        ``serve.ingest`` (which quarantines and gap-fills); a direct
+        in-process feeder handing over garbage is a caller bug, and nothing
+        non-finite may ever reach the device carry."""
         trace = np.asarray(trace_kbps, np.float64).reshape(-1)
+        if trace.size and (not np.all(np.isfinite(trace))
+                           or np.any(trace < 0.0)):
+            raise ValueError("offer() requires finite, non-negative "
+                             "bandwidth; route untrusted input through "
+                             "serve.ingest.StreamIngestor")
         T = len(trace)
         if faults is None:
             live = np.ones((T, self._C), bool)
@@ -223,6 +267,10 @@ class StreamingFleetRunner:
         t0 = time.perf_counter()
         if self.fault_hook is not None:
             self.fault_hook(window=self.window, rung=self.rung)
+        if self.chaos is not None:
+            # serve.exception / serve.sigterm sites; consumed-once, so a
+            # recovered runner re-serving this window does not re-crash
+            self.chaos.pre_window(self.window)
         logs = self._dispatch_window(W, live)
         wall = time.perf_counter() - t0
         if self.wall_hook is not None:
@@ -332,25 +380,42 @@ class StreamingFleetRunner:
                 "t_first": int(self.carry.t_first), "rung": self.rung,
                 "ok_streak": self.ok_streak,
                 "dropped_slots": self.dropped_slots, "method": self.method,
+                "quarantined": dict(self.quarantined),
+                "quarantined_slots": self.quarantined_slots,
+                "gap_filled_slots": self.gap_filled_slots,
+                "duplicates": self.duplicates,
+                "out_of_order": self.out_of_order,
                 "logs": {k: list(v) for k, v in self.logs.items()}}
         self.saver.save(self._carry_tree(), self._ckpt_path(window),
                         step=window, metadata=meta,
                         blocking=self.checkpointer.preempted)
 
     def restore(self) -> bool:
-        """Restore from the latest COMMITTED checkpoint under ``ckpt_dir``
-        (False if there is none — fresh start).  Rebuilds the full serving
-        state: device carry, codec run key, scene cursor (the scene is pure
-        in (seed, t) — no frames are stored), accumulated logs and
-        counters, ladder rung.  The caller then re-offers the stream from
-        ``t_next``; zero recompiles — the restored carry re-enters the
-        exact executables the pre-crash process compiled."""
+        """Restore from the newest VALID committed checkpoint under
+        ``ckpt_dir`` (False if there is none — fresh start).  Self-healing:
+        every leaf is checksum-verified on read, and a corrupt latest
+        generation (bit-flip, truncation, torn manifest) is SKIPPED — with
+        a ``restore_skip`` event naming what failed — falling back through
+        generation history to the newest checkpoint that verifies.
+        Rebuilds the full serving state: device carry, codec run key, scene
+        cursor (the scene is pure in (seed, t) — no frames are stored),
+        accumulated logs and counters, ladder rung.  The caller then
+        re-offers the stream from ``t_next``; zero recompiles — the
+        restored carry re-enters the exact executables the pre-crash
+        process compiled."""
         if self.cfg.ckpt_dir is None:
             return False
-        path = ckpt.latest_committed(self.cfg.ckpt_dir)
+        tree = meta = path = None
+        for cand in reversed(ckpt.generations(self.cfg.ckpt_dir)):
+            try:
+                tree, meta = ckpt.restore(cand, self._carry_target())
+                path = cand
+                break
+            except ckpt.CheckpointCorruptError as e:
+                self.events.append({"kind": "restore_skip",
+                                    "path": str(cand), "error": str(e)})
         if path is None:
             return False
-        tree, meta = ckpt.restore(path, self._carry_target())
         self.system._key = tree["key"]
         self.carry = EpisodeCarry(
             est=tree["est"], ref=tree["ref"],
@@ -361,6 +426,12 @@ class StreamingFleetRunner:
         self.rung = int(meta["rung"])
         self.ok_streak = int(meta["ok_streak"])
         self.dropped_slots = int(meta["dropped_slots"])
+        self.quarantined = {str(k): int(v) for k, v in
+                            meta.get("quarantined", {}).items()}
+        self.quarantined_slots = int(meta.get("quarantined_slots", 0))
+        self.gap_filled_slots = int(meta.get("gap_filled_slots", 0))
+        self.duplicates = int(meta.get("duplicates", 0))
+        self.out_of_order = int(meta.get("out_of_order", 0))
         self.logs = {k: [float(v) for v in meta["logs"].get(k, [])]
                      for k in LOG_KEYS}
         self.checkpointer.last_saved = self.window
@@ -379,6 +450,10 @@ class StreamingFleetRunner:
             "windows": int(walls.size),
             "slots": slots,
             "dropped_slots": self.dropped_slots,
+            "quarantined_slots": self.quarantined_slots,
+            "gap_filled_slots": self.gap_filled_slots,
+            "duplicates": self.duplicates,
+            "out_of_order": self.out_of_order,
             "p50_window_s": float(np.percentile(walls, 50)) if walls.size else 0.0,
             "p99_window_s": float(np.percentile(walls, 99)) if walls.size else 0.0,
             "slots_per_s": slots / total if total > 0 else 0.0,

@@ -58,6 +58,11 @@ LANES = {
     "audit": [
         "tests/test_audit.py",
     ],
+    "chaos": [
+        "tests/test_chaos.py",
+        "tests/test_ingest.py",
+        "tests/test_ckpt.py",
+    ],
 }
 
 METHODS = ("deepstream", "jcab", "reducto", "static")

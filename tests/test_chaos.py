@@ -1,0 +1,289 @@
+"""The seeded chaos soak: the PR 9 headline differential.
+
+A ``ChaosEngine`` drives >= 6 fault families — checkpoint corruption
+(bit-flip / truncation / torn manifest), save-latency spikes, source
+stalls/timeouts, mid-window exceptions, SIGTERM, duplicate and out-of-order
+delivery — through a windowed serving run over the hardened ingest path.
+The driver below does what a supervised deployment does: catch the crash,
+build a fresh runner, ``restore()`` (which must SKIP corrupted generations
+by checksum), re-feed the stream from ``t_next``, repeat.  At the end:
+
+  * concatenated logs match the FAULT-FREE run <= 1e-5, all 4 methods
+    (every scheduled fault is value-preserving-recoverable);
+  * ZERO episode recompiles across every recovery;
+  * restore demonstrably skipped a deliberately corrupted latest
+    generation (``restore_skip`` events naming the corruption);
+  * nothing quarantined, nothing gap-filled (the recoverable schedule must
+    not trip the poison lane).
+
+A second soak (``poisoned=True``) adds the gap/NaN/negative/absurd sites:
+those slots are perturbed BY DESIGN, so the contract flips to exact
+accounting — per-reason quarantine counts and gap-fill counts equal to the
+engine's fired-event counts — plus finite logs (poison never reaches the
+compiled episode).  Chaos runs are replayed twice from the same
+``(seed, schedule)`` and must produce identical fault-event sequences and
+logs.  The env-gated 1000-slot headline (``make ci-chaos`` sets
+``REPRO_CHAOS_HEADLINE_SLOTS=1000``) adds the ROADMAP item-5 memory
+ceiling: post-warmup RSS delta bounded (``REPRO_SOAK_RSS_MB``).
+"""
+import os
+import resource
+
+import numpy as np
+import pytest
+
+import harness
+from repro.ckpt import checkpoint as ckpt
+from repro.core import fleet as fleet_mod
+from repro.data.scenarios import make_chaos_schedule, make_soak_stream
+from repro.ft.chaos import (RECOVERABLE_SITES, SITES, ChaosEngine,
+                            ChaosError, SiteSpec, fold_rng,
+                            schedule_from_json, schedule_to_json)
+from repro.serve import ingest as ing
+from repro.serve.stream import StreamConfig
+
+from test_serve_stream import _logs, _runner, _scene_cfg
+
+CHAOS_SLOTS = int(os.environ.get("REPRO_CHAOS_SLOTS", "48"))
+WIN = 8
+STREAM_KEYS = ("utility", "mean_f1", "bytes", "alloc_kbps", "extra", "area")
+RSS_CEILING_MB = float(os.environ.get("REPRO_SOAK_RSS_MB", "768"))
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _fault_free(detectors, scfg, method, trace, live):
+    """The reference: same windowed serving, no chaos, no checkpoints."""
+    r = _runner(detectors, scfg, method,
+                StreamConfig(window_slots=WIN, queue_slots=WIN,
+                             degrade=False))
+    t = 0
+    while t < len(trace):
+        t += r.offer(trace[t:t + WIN], faults=live[t:t + WIN])
+        r.serve()
+    r.serve(flush=True)
+    return r
+
+
+def _drive_chaos(detectors, scfg, method, trace, live, engine, ckpt_dir,
+                 *, keep=None, max_restarts=25):
+    """The supervised serving loop under chaos: crash -> fresh runner ->
+    restore (checksum fallback) -> re-feed from ``t_next`` -> continue.
+    The ENGINE is shared across incarnations (consumed-once faults), the
+    runners are not — exactly a process supervisor's view.  Returns
+    (final runner, all events across incarnations, restarts)."""
+    T = len(trace)
+    lines = [ing.format_record(t, trace[t], live[t]) for t in range(T)]
+    all_events, restarts = [], 0
+    while True:
+        r = _runner(detectors, scfg, method,
+                    StreamConfig(window_slots=WIN, queue_slots=4 * WIN,
+                                 degrade=False, ckpt_dir=ckpt_dir,
+                                 ckpt_keep=keep, install_signal=True),
+                    chaos=engine)
+        r.restore()
+        src = ing.ChaosSource(ing.ListSource(lines[r.t_next:], batch=WIN),
+                              engine)
+        it = ing.StreamIngestor(
+            r, src, ing.IngestConfig(reorder_window=3 * WIN),
+            sleep_fn=lambda s: None)
+        try:
+            it.pump(until_t=T, flush=True)
+            r.saver.wait()
+            r.checkpointer.close()
+            all_events.extend(r.events)
+            return r, all_events, restarts
+        except (ChaosError, SystemExit):
+            r.saver.wait()              # a window-boundary save may be in flight
+            r.checkpointer.close()
+            all_events.extend(r.events)
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+
+
+# -- the headline differential -------------------------------------------------
+
+
+@pytest.mark.parametrize("method", harness.METHODS)
+def test_chaos_soak_differential(detectors, method, tmp_path):
+    scfg = _scene_cfg()
+    trace, live = make_soak_stream(CHAOS_SLOTS, num_cams=scfg.num_cameras)
+    schedule = make_chaos_schedule(CHAOS_SLOTS, WIN)
+    assert set(schedule) <= RECOVERABLE_SITES   # value-preserving only
+
+    ref = _fault_free(detectors, scfg, method, trace, live)
+    n0 = fleet_mod.episode_compile_count()
+
+    engine = ChaosEngine(seed=7, schedule=schedule)
+    r, events, restarts = _drive_chaos(detectors, scfg, method, trace, live,
+                                       engine, str(tmp_path))
+
+    # every scheduled family fired, and the run needed real recoveries
+    fired = {e["site"] for e in engine.events}
+    assert len({s.split(".")[0] for s in fired}) == 4
+    assert len(fired) >= 6, fired
+    assert restarts >= 3                         # 2 exceptions + 1 SIGTERM
+
+    # restore demonstrably skipped the deliberately corrupted latest
+    # generation(s): checksum/manifest failures named, then an older valid
+    # generation restored
+    skips = [e for e in events if e["kind"] == "restore_skip"]
+    assert skips and all("leaf" in e["error"] or "manifest" in e["error"]
+                         for e in skips)
+    assert any(e["kind"] == "restore" for e in events)
+
+    # zero episode recompiles across ALL recoveries
+    assert fleet_mod.episode_compile_count() == n0, \
+        "chaos recovery recompiled an episode executable"
+
+    # the recoverable schedule must never trip the poison/fill lane
+    assert r.quarantined_slots == 0 and r.gap_filled_slots == 0
+
+    # ... and the concatenated logs match the fault-free run
+    assert r.t_next == CHAOS_SLOTS
+    assert len(r.logs["W"]) == CHAOS_SLOTS
+    harness.assert_logs_match(_logs(ref), _logs(r), keys=STREAM_KEYS,
+                              ctx=f"chaos {method}")
+
+
+def test_chaos_poisoned_stream_accounts_exactly(detectors, tmp_path):
+    """gap/NaN/negative/absurd perturb their slots BY DESIGN — here the
+    contract is exact accounting against the engine's own fired-event
+    counts, and finite logs end to end.  Delivery/value sites only: a
+    crash would drop the counters accumulated since the last checkpoint
+    while consumed-once keeps the fault from re-firing on replay, so the
+    exact-equality contract is an ingest-lane contract (crash interplay is
+    the soak differential's job)."""
+    scfg = _scene_cfg()
+    trace, live = make_soak_stream(CHAOS_SLOTS, num_cams=scfg.num_cameras)
+    schedule = {site: spec for site, spec in
+                make_chaos_schedule(CHAOS_SLOTS, WIN, poisoned=True).items()
+                if site.startswith(("ingest.", "source."))}
+    engine = ChaosEngine(seed=11, schedule=schedule)
+    r, events, restarts = _drive_chaos(detectors, scfg, "deepstream", trace,
+                                       live, engine, str(tmp_path))
+    assert restarts == 0
+    assert r.t_next == CHAOS_SLOTS and len(r.logs["W"]) == CHAOS_SLOTS
+
+    c = engine.counts()
+    poisons = c["ingest.nan"] + c["ingest.negative"] + c["ingest.absurd"]
+    assert poisons > 0 and c["ingest.gap"] > 0
+    # every poisoned record quarantined with the right reason; every
+    # quarantined/dropped slot gap-filled by policy — accounted exactly
+    assert r.quarantined == {"non_finite": c["ingest.nan"],
+                             "negative": c["ingest.negative"],
+                             "absurd": c["ingest.absurd"]}
+    assert r.quarantined_slots == poisons
+    assert r.gap_filled_slots == c["ingest.gap"] + poisons
+    gap_events = [e for e in events if e["kind"] == "gap_fill"]
+    assert len(gap_events) == r.gap_filled_slots
+
+    # no malformed value ever reached the compiled episode
+    logs = _logs(r)
+    for k, v in logs.items():
+        assert np.all(np.isfinite(v)), k
+    assert np.all(logs["W"] >= 0)
+
+
+def test_chaos_replay_identical(detectors, tmp_path):
+    """The whole chaos run — crashes, recoveries, fault parameters — is a
+    pure function of (seed, schedule): two drives produce identical engine
+    event sequences and identical logs."""
+    scfg = _scene_cfg()
+    trace, live = make_soak_stream(CHAOS_SLOTS, num_cams=scfg.num_cameras)
+    schedule = make_chaos_schedule(CHAOS_SLOTS, WIN)
+
+    runs = []
+    for i in range(2):
+        d = tmp_path / f"run{i}"
+        engine = ChaosEngine(seed=7, schedule=schedule)
+        r, _, restarts = _drive_chaos(detectors, scfg, "static", trace,
+                                      live, engine, str(d))
+        # the firing sequence modulo the run-local checkpoint paths
+        fired = [{k: v for k, v in e.items() if k != "path"}
+                 for e in engine.events]
+        runs.append((fired, _logs(r), restarts))
+    assert runs[0][0] == runs[1][0]
+    assert runs[0][2] == runs[1][2]
+    for k in STREAM_KEYS:
+        np.testing.assert_array_equal(runs[0][1][k], runs[1][1][k])
+
+
+# -- engine unit surface -------------------------------------------------------
+
+
+def test_engine_rejects_unknown_site():
+    with pytest.raises(ValueError, match="unknown chaos sites"):
+        ChaosEngine(0, {"ckpt.made_up": {"at": [1]}})
+
+
+def test_engine_consumed_once_and_pure():
+    e = ChaosEngine(3, {"serve.exception": {"at": [5]},
+                        "ingest.gap": {"rate": 0.5}})
+    assert e.scheduled("serve.exception", 5)
+    assert e.fire("serve.exception", 5)
+    assert not e.fire("serve.exception", 5)      # consumed
+    assert e.scheduled("serve.exception", 5)     # ... but still scheduled
+    # rate draws are pure in (seed, site, step)
+    draws = [e.scheduled("ingest.gap", t) for t in range(64)]
+    assert draws == [e.scheduled("ingest.gap", t) for t in range(64)]
+    assert any(draws) and not all(draws)
+
+
+def test_fold_rng_stable_and_distinct():
+    a = fold_rng(1, "site.x", 3).integers(1 << 30)
+    assert a == fold_rng(1, "site.x", 3).integers(1 << 30)
+    assert a != fold_rng(1, "site.y", 3).integers(1 << 30)
+    assert a != fold_rng(2, "site.x", 3).integers(1 << 30)
+
+
+def test_schedule_json_roundtrip():
+    sched = {k: SiteSpec.of(v)
+             for k, v in make_chaos_schedule(96, 8, seed=3,
+                                             poisoned=True).items()}
+    assert schedule_from_json(schedule_to_json(sched)) == sched
+    assert set(sched) <= set(SITES) and len(sched) == 14
+
+
+# -- env-gated 1000-slot headline (make ci-chaos) ------------------------------
+
+
+@pytest.mark.skipif(not os.environ.get("REPRO_CHAOS_HEADLINE_SLOTS"),
+                    reason="headline soak: set REPRO_CHAOS_HEADLINE_SLOTS "
+                           "(make ci-chaos)")
+def test_chaos_headline_1000_slot_soak(detectors, tmp_path):
+    """The full-scale differential: >= 6 families over the 1000-slot
+    diurnal stream, retention GC active, logs match fault-free <= 1e-5,
+    zero recompiles, bounded post-warmup RSS growth (ROADMAP item 5)."""
+    slots = int(os.environ["REPRO_CHAOS_HEADLINE_SLOTS"])
+    keep = 8
+    scfg = _scene_cfg()
+    trace, live = make_soak_stream(slots, num_cams=scfg.num_cameras)
+    schedule = make_chaos_schedule(slots, WIN)
+
+    ref = _fault_free(detectors, scfg, "deepstream", trace, live)
+    n0 = fleet_mod.episode_compile_count()
+    rss0 = _rss_mb()                  # post-warmup peak
+
+    engine = ChaosEngine(seed=7, schedule=schedule)
+    r, events, restarts = _drive_chaos(detectors, scfg, "deepstream", trace,
+                                       live, engine, str(tmp_path),
+                                       keep=keep)
+    assert r.t_next == slots and restarts >= 3
+    assert fleet_mod.episode_compile_count() == n0
+    assert any(e["kind"] == "restore_skip" for e in events)
+    assert r.quarantined_slots == 0 and r.gap_filled_slots == 0
+    harness.assert_logs_match(_logs(ref), _logs(r), keys=STREAM_KEYS,
+                              ctx="chaos headline")
+
+    # retention GC held the checkpoint directory bounded (keep-last-N plus
+    # at most the protected newest-valid generation)
+    assert len(ckpt.generations(tmp_path)) <= keep + 1
+
+    # ROADMAP item-5 memory ceiling: peak RSS growth after warmup bounded
+    delta = _rss_mb() - rss0
+    assert delta <= RSS_CEILING_MB, \
+        f"post-warmup RSS grew {delta:.0f} MB (> {RSS_CEILING_MB:.0f} MB)"

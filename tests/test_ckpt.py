@@ -173,3 +173,183 @@ def test_carry_roundtrip_sharded_4dev(tmp_path):
                           env=env, cwd=str(root))
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
     assert "CKPT-SHARDED-PASS" in proc.stdout, proc.stdout
+
+
+# -- self-healing: corruption battery, generation fallback, retention GC ------
+#
+# PR 9: committed checkpoints can still rot AFTER the atomic commit
+# (storage bit-flips, truncation, torn metadata).  Each fixture below must
+# fail ``verify_checkpoint`` with the leaf/field NAMED, make ``restore``
+# raise ``CheckpointCorruptError``, and push ``latest_valid`` back a
+# generation — while ``gc_generations`` never deletes the only valid one.
+
+from repro.ft import chaos as chaos_mod
+
+
+def _gens(tmp_path, n=3):
+    """n committed generations with DISTINCT trees; returns the trees."""
+    trees = {}
+    for w in range(1, n + 1):
+        trees[w] = _carry_tree(w)
+        ckpt.save(trees[w], tmp_path / f"window_{w:08d}", step=w,
+                  metadata={"w": w})
+    return trees
+
+
+def _corrupt(kind, path):
+    rng = np.random.default_rng(0)
+    if kind == "bitflip":
+        chaos_mod.corrupt_bitflip(path, rng)
+    elif kind == "truncate":
+        chaos_mod.corrupt_truncate(path, rng)
+    else:
+        chaos_mod.corrupt_torn_manifest(path, rng)
+
+
+@pytest.mark.parametrize("kind", ["bitflip", "truncate", "torn_manifest"])
+def test_corruption_fails_verification_named(tmp_path, kind):
+    trees = _gens(tmp_path, n=3)
+    latest = ckpt.latest_committed(tmp_path)
+    assert ckpt.verify_checkpoint(latest) == []
+    _corrupt(kind, latest)
+
+    errors = ckpt.verify_checkpoint(latest)
+    assert errors, f"{kind} passed verification"
+    msg = " | ".join(errors)
+    if kind == "torn_manifest":
+        assert "manifest.json" in msg
+    else:
+        # the failing leaf and field/cause are named
+        assert "leaf" in msg
+        assert any(s in msg for s in ("crc32", "truncated", "decompress",
+                                      "raw_nbytes"))
+
+    # restore refuses the corrupt generation with the same diagnosis ...
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(latest, _zero_target(trees[3]))
+    # ... and generation fallback lands on the newest VALID one, which
+    # still round-trips bit-stable
+    fallback = ckpt.latest_valid(tmp_path)
+    assert fallback == tmp_path / "window_00000002"
+    got, meta = ckpt.restore(fallback, _zero_target(trees[2]))
+    _assert_bitstable(trees[2], got)
+    assert meta["w"] == 2
+
+
+def test_torn_rename_fixture_is_skipped_by_generations(tmp_path):
+    """A torn RENAME (crash between staging write and commit) leaves a
+    ``*.tmp`` dir with a marker inside: never committed, never a
+    generation, named by verify."""
+    import shutil
+    _gens(tmp_path, n=1)
+    torn = tmp_path / "window_00000002.tmp"
+    shutil.copytree(tmp_path / "window_00000001", torn)
+    assert (torn / ckpt.COMMIT_MARKER).exists()
+    assert not ckpt.is_committed(torn)
+    assert [p.name for p in ckpt.generations(tmp_path)] \
+        == ["window_00000001"]
+    errs = ckpt.verify_checkpoint(torn)
+    assert errs and "not committed" in errs[0]
+    assert ckpt.latest_valid(tmp_path) == tmp_path / "window_00000001"
+
+
+def test_all_generations_corrupt_yields_none(tmp_path):
+    _gens(tmp_path, n=2)
+    for p in ckpt.generations(tmp_path):
+        _corrupt("truncate", p)
+    assert ckpt.latest_valid(tmp_path) is None
+
+
+def test_format1_checkpoint_without_checksums_still_restores(tmp_path):
+    """Forward compatibility: checkpoints written before per-leaf checksums
+    existed (no crc32/raw_nbytes manifest fields) restore unchecked."""
+    import json
+    tree = _carry_tree()
+    ckpt.save(tree, tmp_path / "w1", step=1)
+    mf = tmp_path / "w1" / "manifest.json"
+    doc = json.loads(mf.read_text())
+    for ent in doc["leaves"].values():
+        ent.pop("crc32"), ent.pop("raw_nbytes")
+    doc["format"] = 1
+    mf.write_text(json.dumps(doc))
+    assert ckpt.verify_checkpoint(tmp_path / "w1") == []
+    got, _ = ckpt.restore(tmp_path / "w1", _zero_target(tree))
+    _assert_bitstable(tree, got)
+
+
+def test_gc_keeps_last_n(tmp_path):
+    _gens(tmp_path, n=5)
+    removed = ckpt.gc_generations(tmp_path, keep=2)
+    assert [p.name for p in removed] == [f"window_{w:08d}" for w in (1, 2, 3)]
+    assert [p.name for p in ckpt.generations(tmp_path)] \
+        == ["window_00000004", "window_00000005"]
+
+
+def test_gc_never_removes_newest_valid(tmp_path):
+    """Every generation newer than window_2 is corrupt: GC (keep=1) must
+    keep window_2 — the ONLY restorable state — alongside the newest."""
+    trees = _gens(tmp_path, n=4)
+    _corrupt("bitflip", tmp_path / "window_00000003")
+    _corrupt("torn_manifest", tmp_path / "window_00000004")
+    removed = ckpt.gc_generations(tmp_path, keep=1)
+    names = [p.name for p in ckpt.generations(tmp_path)]
+    assert "window_00000002" in names          # protected newest-valid
+    assert "window_00000004" in names          # keep-last-1
+    assert [p.name for p in removed] == ["window_00000001",
+                                         "window_00000003"]
+    got, _ = ckpt.restore(ckpt.latest_valid(tmp_path),
+                          _zero_target(trees[2]))
+    _assert_bitstable(trees[2], got)
+
+
+def test_gc_never_removes_only_valid_generation(tmp_path):
+    """The satellite's exact case: ONE generation, corrupt everything
+    newer ... there is nothing newer — GC with any keep must not delete
+    the only valid generation; and with the only-valid being the OLDEST of
+    many corrupt ones, keep=1 still preserves it."""
+    trees = _gens(tmp_path, n=1)
+    assert ckpt.gc_generations(tmp_path, keep=1) == []
+    assert ckpt.latest_valid(tmp_path) == tmp_path / "window_00000001"
+
+    # now bury it under corrupt newer generations
+    for w in (2, 3):
+        ckpt.save(_carry_tree(w), tmp_path / f"window_{w:08d}", step=w)
+        _corrupt("truncate", tmp_path / f"window_{w:08d}")
+    ckpt.gc_generations(tmp_path, keep=1)
+    assert ckpt.latest_valid(tmp_path) == tmp_path / "window_00000001"
+    got, _ = ckpt.restore(tmp_path / "window_00000001",
+                          _zero_target(trees[1]))
+    _assert_bitstable(trees[1], got)
+
+
+def test_gc_rejects_bad_keep(tmp_path):
+    with pytest.raises(ValueError, match="keep must be >= 1"):
+        ckpt.AsyncSaver(keep=0)
+
+
+def test_async_saver_gc_and_chaos_hooks(tmp_path):
+    """AsyncSaver(keep=, chaos=) wiring: GC runs after each commit and the
+    chaos hooks fire at the save boundaries (latency pre-write, corruption
+    post-commit) — the corrupted latest is then exactly what restore's
+    generation fallback must skip."""
+    from repro.ft.chaos import ChaosEngine
+    eng = ChaosEngine(0, {"ckpt.bitflip": {"at": [3]},
+                          "ckpt.save_latency": {"at": [2], "mag": 0.0}})
+    saver = ckpt.AsyncSaver(keep=2, chaos=eng)
+    trees = {}
+    for w in range(1, 4):
+        trees[w] = _carry_tree(w)
+        saver.save(trees[w], tmp_path / f"window_{w:08d}", step=w,
+                   blocking=True)
+    assert {e["site"] for e in eng.events} \
+        == {"ckpt.bitflip", "ckpt.save_latency"}
+    # keep=2 GC'd generation 1 ...
+    names = [p.name for p in ckpt.generations(tmp_path)]
+    assert names == ["window_00000002", "window_00000003"]
+    assert saver.gc_removed == [str(tmp_path / "window_00000001")]
+    # ... and the chaos-corrupted latest falls back to generation 2
+    assert ckpt.verify_checkpoint(tmp_path / "window_00000003")
+    assert ckpt.latest_valid(tmp_path) == tmp_path / "window_00000002"
+    got, _ = ckpt.restore(ckpt.latest_valid(tmp_path),
+                          _zero_target(trees[2]))
+    _assert_bitstable(trees[2], got)

@@ -1,0 +1,417 @@
+"""Hardened ingest (``serve.ingest``): protocol, sequencing, quarantine.
+
+The stage's contract: no malformed input ever reaches the device carry —
+garbage quarantines (counted, per reason), duplicates dedupe, bounded
+out-of-order arrivals re-sequence exactly, holes gap-fill by the declared
+policy — and a clean stream served THROUGH the ingest path is slot-for-slot
+identical to the trusted direct ``offer()`` path.  Also here: source
+backoff/stall behavior (injected sleep), file-tail and socket sources, the
+deterministic load-shed regression for the direct path, and the
+``ChaosSource`` delivery-fault unit tests.
+"""
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+import harness
+from repro.data.scenarios import make_soak_stream
+from repro.ft.chaos import ChaosEngine
+from repro.serve import ingest as ing
+from repro.serve.stream import StreamConfig, StreamingFleetRunner
+
+from test_serve_stream import _runner, _scene_cfg, _stream_inputs, _logs
+
+# -- line protocol -------------------------------------------------------------
+
+
+def test_record_roundtrip():
+    for t, kbps, live in [(0, 64.0, (True,)), (17, 1380.5, (True, False, True)),
+                          (999, 0.0, (False, True))]:
+        line = ing.format_record(t, kbps, live)
+        assert ing.parse_record(line) == ing.SlotRecord(t, kbps, live)
+
+
+@pytest.mark.parametrize("line", [
+    "", "1 2", "1 2 3 4", "x 100.0 111", "1 abc 111", "-1 100.0 111",
+    "1 100.0 12a", "1 100.0 201",
+])
+def test_parse_rejects_malformed(line):
+    with pytest.raises(ValueError):
+        ing.parse_record(line)
+
+
+def test_parse_accepts_nan_validator_rejects():
+    """'nan' is a valid float literal — it must PARSE and then be caught by
+    the validator, so it lands in the quarantine lane with a value reason,
+    not a parse error."""
+    rec = ing.parse_record("3 nan 11")
+    assert np.isnan(rec.kbps)
+    assert ing.validate_record(rec, 2) == "non_finite"
+
+
+@pytest.mark.parametrize("kbps,cams,reason", [
+    (float("nan"), 1, "non_finite"), (float("inf"), 1, "non_finite"),
+    (-5.0, 1, "negative"), (1e9, 1, "absurd"),
+    (100.0, 2, "liveness_arity"), (100.0, 1, None),
+])
+def test_validate_reasons(kbps, cams, reason):
+    assert ing.validate_record(
+        ing.SlotRecord(0, kbps, (True,)), cams) == reason
+
+
+def test_validate_rejects_all_dead_row():
+    assert ing.validate_record(
+        ing.SlotRecord(0, 100.0, (False, False)), 2) == "liveness_dead"
+
+
+# -- sequencer -----------------------------------------------------------------
+
+
+def _push_all(seq, ts, kbps0=100.0):
+    out = []
+    for t in ts:
+        out.extend(seq.push(ing.SlotRecord(t, kbps0 + t, (True, True, True))))
+    return out
+
+
+def test_sequencer_in_order_passthrough():
+    seq = ing.SlotSequencer(3)
+    out = _push_all(seq, range(6))
+    assert [o[0] for o in out] == list(range(6))
+    assert seq.duplicates == seq.out_of_order == seq.gap_filled == 0
+
+
+def test_sequencer_dedupes_and_reorders():
+    ev = []
+    seq = ing.SlotSequencer(3, reorder_window=4,
+                            on_event=lambda k, **i: ev.append(k))
+    out = _push_all(seq, [0, 2, 1, 1, 3, 0])
+    assert [o[0] for o in out] == [0, 1, 2, 3]
+    assert seq.duplicates == 2 and seq.out_of_order == 1
+    # emitted bandwidths are the ORIGINAL records', not fill values
+    assert [o[1] for o in out] == [100.0, 101.0, 102.0, 103.0]
+    assert ev.count("duplicate") == 2 and ev.count("out_of_order") == 1
+
+
+def test_sequencer_gap_fill_policy():
+    """A hole forced past the reorder window gap-fills with hold-last
+    bandwidth and the anchor-only liveness row (the fleet requires >= 1
+    live camera per slot, so 'all-dead' realizes as anchor-only)."""
+    seq = ing.SlotSequencer(3, reorder_window=2)
+    out = _push_all(seq, [0, 1, 4, 5])
+    assert [o[0] for o in out] == [0, 1, 2, 3, 4, 5]
+    assert seq.gap_slots == [2, 3] and seq.gap_filled == 2
+    for o in out:
+        if o[0] in (2, 3):
+            assert o[1] == 101.0                    # hold-last
+            assert o[2][0] and not o[2][1:].any()   # anchor-only row
+    # fill never poisons hold-last: slot 4 emits its own value
+    assert out[4][1] == 104.0
+
+
+def test_sequencer_flush_fills_tail():
+    seq = ing.SlotSequencer(2, reorder_window=4)
+    out = _push_all(seq, [0, 2])          # 1 missing, 2 held
+    assert out == [] or [o[0] for o in out] == [0]
+    out2 = seq.flush(until_t=5)
+    ts = [o[0] for o in out] + [o[0] for o in out2]
+    assert ts == [0, 1, 2, 3, 4]
+    assert seq.gap_slots == [1, 3, 4]
+
+
+def test_sequencer_rejects_bad_window():
+    with pytest.raises(ValueError):
+        ing.SlotSequencer(3, reorder_window=0)
+
+
+# -- backoff + sources ---------------------------------------------------------
+
+
+def test_backoff_ladder_and_reset():
+    b = ing.Backoff(initial=0.001, factor=2.0, ceiling=0.008)
+    assert [b.next() for _ in range(6)] == [0.001, 0.002, 0.004, 0.008,
+                                            0.008, 0.008]
+    b.reset()
+    assert b.next() == 0.001
+
+
+def test_file_tail_source_incremental(tmp_path):
+    p = tmp_path / "stream.txt"
+    src = ing.FileTailSource(p)
+    assert src.read_lines() == []          # not created yet
+    p.write_text("0 100.0 11\n1 200.0 11\n2 30")
+    assert src.read_lines() == ["0 100.0 11", "1 200.0 11"]
+    assert src.read_lines() == []          # partial line buffers
+    with open(p, "a") as f:
+        f.write("0.0 11\n3 400.0 11\n")
+    assert src.read_lines() == ["2 300.0 11", "3 400.0 11"]
+
+
+def test_socket_source_reassembles_lines():
+    server = socket.socket()
+    server.bind(("127.0.0.1", 0))
+    server.listen(1)
+    port = server.getsockname()[1]
+
+    def feeder():
+        conn, _ = server.accept()
+        # split one record across two sends
+        conn.sendall(b"0 100.0 11\n1 2")
+        conn.sendall(b"00.0 11\n")
+        conn.close()
+
+    th = threading.Thread(target=feeder)
+    th.start()
+    src = ing.SocketLineSource("127.0.0.1", port, recv_timeout=1.0)
+    got = []
+    while not src.exhausted():
+        try:
+            got.extend(src.read_lines())
+        except ing.SourceTimeout:
+            pass
+    th.join()
+    server.close()
+    src.close()
+    assert got == ["0 100.0 11", "1 200.0 11"]
+
+
+def test_socket_source_connect_backoff_exhausts():
+    sleeps = []
+    src = ing.SocketLineSource("127.0.0.1", 1, connect_retries=3,
+                               sleep_fn=sleeps.append)
+    with pytest.raises(ing.SourceStalled, match="could not connect"):
+        src.read_lines()
+    assert len(sleeps) == 3 and sleeps[1] > sleeps[0]
+
+
+# -- the ingest pipeline against the runner ------------------------------------
+
+
+def _ingest_runner(detectors, scfg, method="static", **cfg_kw):
+    cfg_kw.setdefault("window_slots", 8)
+    return _runner(detectors, scfg, method, StreamConfig(**cfg_kw))
+
+
+def _lines(trace, live, order=None):
+    idx = range(len(trace)) if order is None else order
+    return [ing.format_record(t, trace[t], live[t]) for t in idx]
+
+
+def test_ingest_matches_direct_offer(detectors):
+    """A clean stream through parse -> quarantine -> sequence -> offer is
+    slot-for-slot identical to the trusted in-process offer() path."""
+    scfg, trace, faults = _stream_inputs(12, "camera_flap")
+    direct = _ingest_runner(detectors, scfg)
+    direct.offer(trace, faults=faults)
+    direct.serve(flush=True)
+
+    r = _ingest_runner(detectors, scfg)
+    it = ing.StreamIngestor(r, ing.ListSource(_lines(trace, faults)),
+                            sleep_fn=lambda s: None)
+    it.pump(until_t=len(trace), flush=True)
+    assert r.t_next == len(trace)
+    assert r.quarantined_slots == r.gap_filled_slots == 0
+    harness.assert_logs_match(_logs(direct), _logs(r),
+                              keys=("utility", "bytes", "alloc_kbps"),
+                              ctx="ingest==direct")
+
+
+def test_ingest_messy_delivery_is_exact(detectors):
+    """Duplicates + bounded out-of-order arrivals are REPAIRED exactly:
+    same logs as the clean stream, with the repairs counted."""
+    scfg, trace, faults = _stream_inputs(12, "camera_flap")
+    clean = _ingest_runner(detectors, scfg)
+    clean.offer(trace, faults=faults)
+    clean.serve(flush=True)
+
+    order = [0, 1, 3, 2, 2, 4, 5, 6, 7, 7, 8, 10, 9, 11]   # dups + swaps
+    r = _ingest_runner(detectors, scfg)
+    it = ing.StreamIngestor(r, ing.ListSource(_lines(trace, faults, order)),
+                            sleep_fn=lambda s: None)
+    it.pump(until_t=len(trace), flush=True)
+    assert r.duplicates == 2 and r.out_of_order == 2
+    assert r.gap_filled_slots == 0 and r.quarantined_slots == 0
+    harness.assert_logs_match(_logs(clean), _logs(r),
+                              keys=("utility", "bytes", "alloc_kbps"),
+                              ctx="messy==clean")
+
+
+def test_ingest_quarantines_poison_and_gap_fills(detectors):
+    """Poisoned records (NaN / negative / absurd / dead-row / garbage) are
+    quarantined per reason BEFORE sequencing, the holes gap-fill clean, and
+    the served logs stay finite — poison can never NaN the episode."""
+    scfg, trace, faults = _stream_inputs(16, "none")
+    lines = _lines(trace, faults)
+    lines[3] = ing.format_record(3, float("nan"), faults[3])
+    lines[5] = ing.format_record(5, -44.0, faults[5])
+    lines[8] = ing.format_record(8, 5e8, faults[8])
+    lines[10] = f"10 100.0 {'0' * scfg.num_cameras}"   # all-dead row
+    lines[12] = "garbage line ???"      # unparseable
+
+    r = _ingest_runner(detectors, scfg)
+    it = ing.StreamIngestor(r, ing.ListSource(lines),
+                            sleep_fn=lambda s: None)
+    it.pump(until_t=len(trace), flush=True)
+    assert r.t_next == len(trace)
+    assert r.quarantined == {"non_finite": 1, "negative": 1, "absurd": 1,
+                             "liveness_dead": 1, "parse": 1}
+    assert r.quarantined_slots == 5
+    assert r.gap_filled_slots == 5      # every quarantined slot fills clean
+    for k, v in _logs(r).items():
+        assert np.all(np.isfinite(v)), k
+    assert np.all(_logs(r)["W"] >= 0)
+    kinds = [e["kind"] for e in r.events]
+    assert kinds.count("quarantine") == 5 and kinds.count("gap_fill") == 5
+
+
+def test_ingest_counters_survive_restore(detectors, tmp_path):
+    scfg, trace, faults = _stream_inputs(8, "none")
+    lines = _lines(trace, faults)
+    lines[2] = ing.format_record(2, float("inf"), faults[2])
+    cfg = dict(ckpt_dir=str(tmp_path))
+    r = _ingest_runner(detectors, scfg, **cfg)
+    it = ing.StreamIngestor(r, ing.ListSource(lines),
+                            sleep_fn=lambda s: None)
+    it.pump(until_t=len(trace), flush=True)
+    r.saver.wait()
+    assert r.quarantined_slots == 1 and r.gap_filled_slots == 1
+
+    r2 = _ingest_runner(detectors, scfg, **cfg)
+    assert r2.restore()
+    assert r2.quarantined == {"non_finite": 1}
+    assert r2.quarantined_slots == 1 and r2.gap_filled_slots == 1
+
+
+def test_ingest_backpressure_never_sheds(detectors):
+    """The ingest path applies BACKPRESSURE on a full queue (slots wait in
+    the ingestor), so ``dropped_slots`` stays the direct path's explicit
+    shed counter — and stays 0 here despite queue_slots == window_slots."""
+    scfg, trace, faults = _stream_inputs(24, "camera_flap")
+    r = _ingest_runner(detectors, scfg, queue_slots=8)
+    it = ing.StreamIngestor(r, ing.ListSource(_lines(trace, faults),
+                                              batch=24),
+                            sleep_fn=lambda s: None)
+    it.pump(until_t=len(trace), flush=True)
+    assert r.t_next == len(trace) and r.dropped_slots == 0
+
+
+def test_direct_offer_sheds_deterministically(detectors):
+    """The direct path's regression: a full queue sheds the SAME count on
+    identical input every time, with the drop event recorded."""
+    scfg, trace, faults = _stream_inputs(12, "camera_flap")
+    drops = []
+    for _ in range(2):
+        r = _ingest_runner(detectors, scfg, queue_slots=8)
+        assert r.offer(trace, faults=faults) == 8
+        drops.append(r.dropped_slots)
+        assert any(e["kind"] == "drop" and e["slots"] == 4
+                   for e in r.events)
+    assert drops == [4, 4]
+    assert r.stats()["dropped_slots"] == 4
+
+
+def test_offer_rejects_nonfinite_direct(detectors):
+    scfg, trace, _ = _stream_inputs(8, "camera_flap")
+    r = _ingest_runner(detectors, scfg)
+    bad = np.array(trace)
+    bad[3] = np.nan
+    with pytest.raises(ValueError, match="finite"):
+        r.offer(bad)
+    with pytest.raises(ValueError, match="finite"):
+        r.offer(np.array([-1.0]))
+
+
+def test_ingest_stalled_source_raises(detectors):
+    scfg, _, _ = _stream_inputs(8, "camera_flap")
+    r = _ingest_runner(detectors, scfg)
+
+    class Dead:
+        def read_lines(self):
+            return []
+
+        def exhausted(self):
+            return False
+
+    sleeps = []
+    it = ing.StreamIngestor(r, Dead(),
+                            ing.IngestConfig(max_idle_polls=5),
+                            sleep_fn=sleeps.append)
+    with pytest.raises(ing.SourceStalled, match="5 polls"):
+        it.pump(until_t=8)
+    # the retry ladder backed off exponentially between polls
+    assert len(sleeps) == 4 and sleeps[1] > sleeps[0]
+
+
+# -- ChaosSource delivery faults ----------------------------------------------
+
+
+def _chaos_source(lines, schedule, seed=7, batch=4):
+    return ing.ChaosSource(ing.ListSource(lines, batch=batch),
+                           ChaosEngine(seed, schedule))
+
+
+def _drain(src):
+    out = []
+    idle = 0
+    while not src.exhausted() and idle < 50:
+        try:
+            lines = src.read_lines()
+        except ing.SourceTimeout:
+            lines = []
+        out.extend(lines)
+        idle = idle + 1 if not lines else 0
+    return out
+
+
+def test_chaos_source_duplicate_and_gap():
+    lines = [ing.format_record(t, 100.0 + t, (True,)) for t in range(8)]
+    src = _chaos_source(lines, {"ingest.duplicate": {"at": [2]},
+                                "ingest.gap": {"at": [5]}})
+    got = [ing.parse_record(ln).t for ln in _drain(src)]
+    assert got.count(2) == 2 and 5 not in got
+    assert sorted(set(got)) == [0, 1, 2, 3, 4, 6, 7]
+
+
+def test_chaos_source_value_rewrites():
+    lines = [ing.format_record(t, 100.0, (True,)) for t in range(6)]
+    src = _chaos_source(lines, {"ingest.nan": {"at": [1]},
+                                "ingest.negative": {"at": [2]},
+                                "ingest.absurd": {"at": [3]}})
+    recs = {r.t: r for r in map(ing.parse_record, _drain(src))}
+    assert np.isnan(recs[1].kbps)
+    assert recs[2].kbps < 0
+    assert recs[3].kbps > ing.DEFAULT_MAX_KBPS
+    assert recs[0].kbps == recs[4].kbps == 100.0
+
+
+def test_chaos_source_reorder_delivers_late_but_complete():
+    lines = [ing.format_record(t, 100.0, (True,)) for t in range(8)]
+    src = _chaos_source(lines, {"ingest.reorder": {"at": [1]}})
+    got = [ing.parse_record(ln).t for ln in _drain(src)]
+    assert sorted(got) == list(range(8))    # nothing lost
+    assert got != list(range(8))            # ... but displaced
+    assert got.index(1) > 1
+
+
+def test_chaos_source_stall_and_timeout_replayable():
+    lines = [ing.format_record(t, 100.0, (True,)) for t in range(4)]
+    sched = {"source.stall": {"at": [1]}, "source.timeout": {"at": [2]}}
+
+    def run():
+        src = _chaos_source(lines, sched, batch=2)
+        events = []
+        while not src.exhausted():
+            try:
+                events.append(("ok", tuple(src.read_lines())))
+            except ing.SourceTimeout:
+                events.append(("timeout", ()))
+        return events
+
+    a, b = run(), run()
+    assert a == b                            # replayable from (seed, schedule)
+    assert ("timeout", ()) in a
+    assert ("ok", ()) in a                   # the stalled poll
+    got = [ing.parse_record(ln).t for _, ls in a for ln in ls]
+    assert sorted(got) == list(range(4))     # stall/timeout lose nothing

@@ -270,10 +270,15 @@ def test_stream_requires_pinned_capacity(detectors):
 
 def test_soak_zero_recompiles_bounded_d2h(detectors):
     """A diurnal soak stream (env-scalable; the 1000-slot version runs in
-    benchmarks/bench_serve.py): after the warmup window, ZERO episode
-    recompiles and exactly 2 harvest fetches per window — serving cost per
-    window is flat no matter how long the stream runs."""
+    benchmarks/bench_serve.py and the chaos headline soak): after the
+    warmup window, ZERO episode recompiles and exactly 2 harvest fetches
+    per window — serving cost per window is flat no matter how long the
+    stream runs — and (ROADMAP item 5) the post-warmup peak-RSS delta is
+    bounded (``REPRO_SOAK_RSS_MB``): an always-on service must not grow
+    host memory with stream length."""
+    import resource
     slots = int(os.environ.get("REPRO_SOAK_SLOTS", "48"))
+    rss_ceiling_mb = float(os.environ.get("REPRO_SOAK_RSS_MB", "768"))
     WIN = 8
     scfg = _scene_cfg()
     trace, live = make_soak_stream(slots, num_cams=scfg.num_cameras)
@@ -286,6 +291,7 @@ def test_soak_zero_recompiles_bounded_d2h(detectors):
     runner.serve()
     n0 = fleet_mod.episode_compile_count()
     d0 = sched_mod.d2h_fetch_counts()
+    rss0_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
 
     t = runner.t_next
     while t < slots:
@@ -299,8 +305,15 @@ def test_soak_zero_recompiles_bounded_d2h(detectors):
     assert d1["harvest"] - d0["harvest"] == 2 * post_warmup
     assert d1["keep"] == d0["keep"] and d1["control"] == d0["control"]
 
+    rss_delta_mb = (resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+                    - rss0_kb) / 1024.0
+    assert rss_delta_mb <= rss_ceiling_mb, \
+        f"post-warmup peak RSS grew {rss_delta_mb:.0f} MB " \
+        f"(> {rss_ceiling_mb:.0f} MB) over {slots} slots"
+
     st = runner.stats()
     assert st["slots"] == slots and st["dropped_slots"] == 0
+    assert st["quarantined_slots"] == 0 and st["gap_filled_slots"] == 0
     assert st["windows"] == runner.window and st["slots_per_s"] > 0
 
 
