@@ -46,12 +46,20 @@
 # additionally enables the 1000-slot headline soak (retention-bounded
 # checkpoint store + peak-RSS ceiling).  Runs WITHOUT fake devices, like
 # ci-serve.
+# `ci-pipeline` is the episode fast-path lane: the software-pipelined scan
+# body's differential vs the straight-line reference body (all methods,
+# with and without camera-churn faults, <= 1e-5), the zero-recompile /
+# two-fetch harvest contracts on the pipelined path, the manifest
+# cost_analysis dead-compute proofs (padded tail slots and the dropped
+# reuse arm cost zero static flops), and the full kernel parity suite
+# (edge_motion, flash_decode, knapsack_dp, tx_codec ops-vs-ref-vs-
+# interpret).  Runs under 8 fake host devices like ci-episode.
 # Lane pytest selections live ONCE, in tests/harness.py (LANES) — the lanes
 # shell out to it instead of duplicating test lists here.
 PY := PYTHONPATH=src python
 
 .PHONY: test bench-quick ci ci-sharded ci-guard ci-episode ci-scenarios \
-	ci-faults ci-serve ci-audit ci-chaos
+	ci-faults ci-serve ci-audit ci-chaos ci-pipeline
 
 test:
 	$(PY) -m pytest -q
@@ -73,6 +81,9 @@ ci-scenarios:
 	REPRO_FAKE_DEVICES=8 REPRO_SCENARIO_QUICK=1 $(PY) tests/harness.py \
 		--lane scenarios
 
+ci-pipeline:
+	REPRO_FAKE_DEVICES=8 $(PY) tests/harness.py --lane pipeline
+
 ci-faults:
 	$(PY) tests/harness.py --lane faults
 
@@ -88,4 +99,4 @@ ci-chaos:
 	REPRO_CHAOS_HEADLINE_SLOTS=1000 $(PY) tests/harness.py --lane chaos
 
 ci: test bench-quick ci-sharded ci-guard ci-episode ci-scenarios ci-faults \
-	ci-serve ci-audit ci-chaos
+	ci-serve ci-audit ci-chaos ci-pipeline

@@ -205,6 +205,93 @@ def _episode_compare(base, num_cameras: int, n_slots: int,
     return out
 
 
+def _lever_compare(base, num_cameras: int, n_slots: int,
+                   reps: int = 3) -> list:
+    """The PR 10 episode fast-path levers, each isolated as an A/B
+    ms/slot pair on identical device-generated segments:
+
+      * ``pipelined_scan`` — the 2-stage software-pipelined scan body
+        (slot t's detector finish overlaps slot t+1's encode) vs the
+        straight-line reference body (``episode_pipelined=False``);
+      * ``bucketed_tail_masking`` — a short trace padded into a larger
+        bucket (the cond-gated dead tail slots the compaction/masking
+        work makes cheap) vs the same trace on its exact-size bucket —
+        a ratio near 1.0 means the padded tail is ~free;
+      * ``tx_kernel`` — the fused Pallas transmission/encode kernel
+        (``use_kernels=True``, the default) vs the unfused jnp codec.
+
+    Pairs are timed INTERLEAVED and the per-side minimum reported, like
+    ``_episode_compare`` (container noise swamps single-shot timings)."""
+    from repro.core.scheduler import DeepStreamSystem, SystemConfig
+    from repro.data.synthetic import DeviceScene
+
+    def build(buckets, **over):
+        cfg = SystemConfig(scene=SceneConfig(seed=31, num_cameras=num_cameras),
+                           eval_frames=base.cfg.eval_frames, batched=True,
+                           shard="auto", episode=True,
+                           episode_buckets=buckets, w_cap_kbps=6000.0, **over)
+        sysd = DeepStreamSystem(cfg, base.light, base.server, base.mlp)
+        sysd.tau_wl, sysd.tau_wh = base.tau_wl, base.tau_wh
+        sysd.jcab_table = base.jcab_table
+        sysd.run(DeviceScene(SceneConfig(seed=7, num_cameras=num_cameras)),
+                 bandwidth_trace("medium", buckets[0], seed=9),
+                 method="deepstream")
+        return sysd
+
+    t_short = max(2, n_slots - 2)
+    fast = build((n_slots,))
+    ref = build((n_slots,), episode_pipelined=False)
+    exact = build((t_short,))
+    nokern = build((n_slots,), use_kernels=False)
+
+    def timed(sysd, T):
+        sysd._key = jax.random.PRNGKey(4242)
+        scene = DeviceScene(SceneConfig(seed=13, num_cameras=num_cameras))
+        trace = bandwidth_trace("medium", T, seed=5)
+        t0 = time.perf_counter()
+        sysd.run(scene, trace, method="deepstream")
+        return (time.perf_counter() - t0) / T * 1e3
+
+    levers = (
+        ("pipelined_scan", fast, ref, n_slots, n_slots, n_slots,
+         "2-stage software-pipelined scan body vs straight-line reference "
+         "(stage overlap needs parallel hardware; a single-core host "
+         "times the staging overhead only)"),
+        ("bucketed_tail_masking", fast, exact, t_short, n_slots, t_short,
+         "short trace padded into a larger bucket (masked, cond-gated "
+         "tail) vs the exact-size bucket — ~1.0x means padding is free"),
+        ("tx_kernel", fast, nokern, n_slots, n_slots, n_slots,
+         "fused Pallas tx/encode-size kernel vs the unfused jnp codec "
+         "(CPU runs the kernel in Pallas interpret mode; compiled-"
+         "accelerator timing is the follow-on)"),
+    )
+    out = []
+    for name, on_sys, off_sys, T, b_on, b_off, desc in levers:
+        ts_on, ts_off = [], []
+        for _ in range(reps):
+            ts_on.append(timed(on_sys, T))
+            ts_off.append(timed(off_sys, T))
+        ms_on, ms_off = float(np.min(ts_on)), float(np.min(ts_off))
+        out.append({
+            "lever": name, "description": desc,
+            "num_cameras": num_cameras, "slots": T,
+            "bucket_on": b_on, "bucket_off": b_off,
+            "ms_per_slot_on": ms_on, "ms_per_slot_off": ms_off,
+            "speedup_on_vs_off": ms_off / ms_on,
+        })
+    return out
+
+
+def _print_levers(levers: list) -> None:
+    c = levers[0]["num_cameras"]
+    print(f"\n[levers] PR 10 fast-path levers (C={c}, interleaved min):")
+    for lv in levers:
+        print(f"  {lv['lever']:22s} on {lv['ms_per_slot_on']:8.1f} / off "
+              f"{lv['ms_per_slot_off']:8.1f} ms/slot  "
+              f"({lv['speedup_on_vs_off']:.2f}x, T={lv['slots']}, "
+              f"bucket {lv['bucket_on']} vs {lv['bucket_off']})")
+
+
 def _fault_overhead(base, num_cameras: int, n_slots: int,
                     reps: int = 3) -> dict:
     """Cost of the fault-tolerance machinery on the episode path.
@@ -423,6 +510,9 @@ def run(quick: bool = False) -> dict:
     fo8 = _fault_overhead(sysd, num_cameras=8, n_slots=4 if quick else 8,
                           reps=2 if quick else 3)
     _print_fault_overhead(fo8)
+    lev8 = _lever_compare(sysd, num_cameras=8, n_slots=4 if quick else 8,
+                          reps=2 if quick else 3)
+    _print_levers(lev8)
     out = {"stages_ms": stages,
            "alloc_placement": sysd.cfg.alloc,   # stage run's allocator mode
            "fleet_comparison": cmp8,
@@ -438,9 +528,13 @@ def run(quick: bool = False) -> dict:
                   "pipelined_host_scene_ms_per_slot",
                   "speedup_episode_vs_pipelined",
                   "speedup_episode_vs_host_scene", "zero_per_slot_transfers")
+    out["levers"] = lev8
     trajectory = {"bench": "bench_latency",
                   "episode_vs_pipelined_c8": {k: ep8[k] for k in _traj_keys},
-                  "fault_overhead_c8": fo8}
+                  "fault_overhead_c8": fo8,
+                  # per-lever A/B entries; benchmarks/run.py appends each as
+                  # its own BENCH_trajectory.json record (bucket/C stamped)
+                  "levers": list(lev8)}
     if not quick:
         cmp16 = _compare_modes(sysd, num_cameras=16, n_slots=4)
         _print_cmp(cmp16)
@@ -454,5 +548,9 @@ def run(quick: bool = False) -> dict:
         _print_fault_overhead(fo16)
         out["fault_overhead_c16"] = fo16
         trajectory["fault_overhead_c16"] = fo16
+        lev16 = _lever_compare(sysd, num_cameras=16, n_slots=4)
+        _print_levers(lev16)
+        out["levers_c16"] = lev16
+        trajectory["levers"] = trajectory["levers"] + list(lev16)
     out["trajectory"] = trajectory
     return out

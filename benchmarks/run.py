@@ -106,10 +106,17 @@ def _append_trajectory(entry: dict, env_meta: dict, quick: bool) -> None:
     datapoints)."""
     path = ART / "BENCH_trajectory.json"
     history = json.loads(path.read_text()) if path.exists() else []
-    history.append({"date": time.strftime("%Y-%m-%d %H:%M:%S"),
-                    "devices": env_meta["device_count"],
-                    "platform": env_meta["platform"], "quick": quick,
-                    **entry})
+    stamp = {"date": time.strftime("%Y-%m-%d %H:%M:%S"),
+             "devices": env_meta["device_count"],
+             "platform": env_meta["platform"], "quick": quick}
+    # per-lever A/B datapoints become SEPARATE records (one per lever per
+    # camera count, bucket/C metadata inline) so a single lever's
+    # regression is greppable across PRs without diffing nested blobs
+    levers = entry.pop("levers", None) or []
+    history.append({**stamp, **entry})
+    for lv in levers:
+        history.append({**stamp, "bench": f"{entry.get('bench')}:lever",
+                        **lv})
     path.write_text(json.dumps(history, indent=2, default=str))
 
 

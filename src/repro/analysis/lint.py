@@ -35,8 +35,10 @@ RULES = ("host-sync", "traced-branch", "unseeded-rng")
 TRACED_SCOPES: Dict[str, Union[str, Set[str]]] = {
     "core/fleet.py": {
         "_key_chain", "slot_camera_keys", "_linspace_sel", "keep_selection",
-        "_slot_step", "_reducto_keep_impl", "_control_impl", "_episode_impl",
+        "_slot_step", "_slot_encode", "_slot_finish", "_reducto_keep_impl",
+        "_control_impl", "_episode_impl",
     },
+    "kernels/tx_codec/ops.py": {"encode_fleet", "encode_fleet_crf"},
     "core/elastic.py": {"init_state_jax", "update_jax", "update_scan"},
     "core/codec.py": "*",
     "core/scheduler.py": {"run_episode"},

@@ -130,7 +130,7 @@ class Canonical:
             w_cap=int(self.w_cap), num_cams=self.C, c_pad=self.C,
             eval_frames=EVAL_FRAMES, block_size=self.block_size,
             conf_thresh=self.conf_thresh, gt_pad=self.G, sharded=False,
-            checked=False)
+            checked=False, pipelined=True)
 
     def episode_args(self, method: str, bucket: int) -> Tuple[Any, ...]:
         """Abstract args in ``fleet._episode_impl`` positional order, at
@@ -249,7 +249,7 @@ def get_programs(kinds: Optional[Sequence[str]] = None,
         args = canon.slot_step_args()
         fn = fleet_mod._get_executable(
             None, canon.ccfg, EVAL_FRAMES, canon.block_size,
-            canon.conf_thresh, True, True, False)
+            canon.conf_thresh, True, True, True, False)
         progs.append(Program(
             name="slot_step/unified", kind="slot_step", fn=fn, abs_args=args,
             donated=_donated_leaf_indices(args, SLOT_STEP_DONATE_ARGNUMS)))

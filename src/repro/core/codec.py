@@ -128,3 +128,37 @@ def encode_segment_crf(cfg: CodecConfig, frames: jax.Array,
     sigma = cfg.sigma0 * jnp.exp(-bpp / cfg.beta)
     x = x + sigma * jax.random.normal(key, x.shape)
     return jnp.clip(x, 0.0, 1.0), pix * bpp / 8.0
+
+
+def encode_fleet_segment(cfg: CodecConfig, frames: jax.Array,
+                         roi_pixels: jax.Array, bitrate_kbps: jax.Array,
+                         res: jax.Array, keys: jax.Array,
+                         num_frames: Optional[jax.Array] = None, *,
+                         use_kernel: bool = True
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Camera-batched ``encode_segment``: frames (C, N, H, W), per-camera
+    scalars (C,), keys (C, 2) -> (decoded (C, N, H, W), size_bytes (C,)).
+
+    ``use_kernel=True`` routes the per-frame transform through the fused
+    pallas transmission kernel (``kernels.tx_codec``) — one VMEM pass per
+    camera computing ONLY the selected resolution-blur branch instead of
+    the scalar path's all-branches unroll; ``use_kernel=False`` is the
+    vmapped per-camera ``encode_segment`` (the pre-kernel fleet path).
+    The two agree to float32 ulp (see the kernel package docstring)."""
+    from repro.kernels.tx_codec import ops as tx_ops
+    return tx_ops.encode_fleet(cfg, frames, roi_pixels, bitrate_kbps, res,
+                               keys, num_frames, use_kernel=use_kernel)
+
+
+def encode_fleet_segment_crf(cfg: CodecConfig, frames: jax.Array,
+                             roi_pixels: jax.Array, keys: jax.Array,
+                             res: Optional[jax.Array] = None,
+                             num_frames: Optional[jax.Array] = None, *,
+                             use_kernel: bool = True
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Camera-batched ``encode_segment_crf`` with the same kernel routing
+    (and ``res=None`` skipping the blur select) as
+    ``encode_fleet_segment``."""
+    from repro.kernels.tx_codec import ops as tx_ops
+    return tx_ops.encode_fleet_crf(cfg, frames, roi_pixels, keys, res,
+                                   num_frames, use_kernel=use_kernel)

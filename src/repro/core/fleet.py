@@ -326,13 +326,119 @@ def keep_selection(keep: jax.Array, F: int) -> KeepSelection:
         w_keep=jnp.mean(keep.astype(jnp.float32), axis=1))
 
 
+class SlotStaged(NamedTuple):
+    """Encode-stage handoff of the SPLIT slot step (``_slot_encode`` ->
+    ``_slot_finish``): everything slot t's detector dispatch + scoring needs,
+    with no reference back to the raw frames/GT — the software-pipelined
+    episode scan carries ONE of these across an iteration boundary so slot
+    t's detector stage overlaps slot t+1's encode stage.  ``gt_m``/``gv_m``
+    are None when the reuse arm is compiled out (``with_reuse=False``)."""
+    batch: jax.Array            # (C*F [+ C], H, W) detector input
+    gt_e: jax.Array             # (C, F, G, 4) eval-frame ground truth
+    gv_e: jax.Array             # (C, F, G)
+    gt_m: Optional[jax.Array]   # (C, F, G, 4) missed-frame GT (reuse arm)
+    gv_m: Optional[jax.Array]   # (C, F, G)
+    eval_w: jax.Array           # (C, F) per-eval-frame weights
+    miss_w: jax.Array           # (C, F) reuse-arm weights
+    w_keep: jax.Array           # (C,) arm mix
+    sizes: jax.Array            # (C,) encoded bytes (pre tx-mask)
+    tx: jax.Array               # (C,) bool transmit mask (live & b > 0)
+
+
+def _slot_encode(cfg: CodecConfig, frames: jax.Array, masks: jax.Array,
+                 b: jax.Array, r: jax.Array, keys: jax.Array,
+                 keep: jax.Array, gt_boxes: jax.Array, gt_valid: jax.Array,
+                 live: jax.Array, *, eval_frames: int, block_size: int,
+                 with_reuse: bool, use_kernel: bool) -> SlotStaged:
+    """Stage A of the split slot step: crop -> fleet encode -> eval-frame
+    gather -> detector-batch build (+ the reuse row and GT gathers).  Pure
+    per-camera work with NO detector dependency, so the pipelined episode
+    scan can run it for slot t+1 while slot t's ``_slot_finish`` is still in
+    flight.  ``use_kernel`` routes the codec transform through the fused
+    pallas transmission kernel (``kernels.tx_codec``); False is the vmapped
+    per-camera ``codec.encode_segment`` oracle — the two agree to float32
+    ulp (see the kernel package docstring)."""
+    C, N, H, W = frames.shape
+    F = min(eval_frames, N)
+    sel = keep_selection(keep, F)
+
+    cropped = jax.vmap(
+        lambda fr, mk: roidet_mod.crop_to_mask(fr, mk, block_size)
+    )(frames, masks)
+    roi_pixels = (jnp.sum(masks, axis=(1, 2))
+                  * (block_size ** 2)).astype(jnp.float32)
+    decoded, sizes = codec_mod.encode_fleet_segment(
+        cfg, cropped, roi_pixels, b, r, keys, sel.n_eff,
+        use_kernel=use_kernel)
+    ev = jnp.take_along_axis(decoded, sel.eval_idx[:, :, None, None], axis=1)
+    batch = ev.reshape(C * F, H, W)
+    gt_e = jnp.take_along_axis(gt_boxes, sel.eval_idx[:, :, None, None],
+                               axis=1)
+    gv_e = jnp.take_along_axis(gt_valid, sel.eval_idx[:, :, None], axis=1)
+    gt_m = gv_m = None
+    if with_reuse:
+        # reuse frames are RAW camera frames (the camera ran its own detector
+        # on them before filtering) — folded into the same server forward
+        reuse_fr = jnp.take_along_axis(
+            frames, sel.reuse_idx[:, None, None, None], axis=1)[:, 0]
+        batch = jnp.concatenate([batch, reuse_fr], axis=0)
+        gt_m = jnp.take_along_axis(gt_boxes, sel.miss_idx[:, :, None, None],
+                                   axis=1)
+        gv_m = jnp.take_along_axis(gt_valid, sel.miss_idx[:, :, None], axis=1)
+    # the transmit mask: dead cameras and zero-allocation slots (a hard
+    # outage leaves every camera at b == 0) send nothing — zero bytes, zero
+    # F1 — while their dead compute keeps the program shape static
+    tx = jnp.asarray(live, bool) & (b > 0.0)
+    return SlotStaged(batch=batch, gt_e=gt_e, gv_e=gv_e, gt_m=gt_m,
+                      gv_m=gv_m, eval_w=sel.eval_w, miss_w=sel.miss_w,
+                      w_keep=sel.w_keep, sizes=sizes, tx=tx)
+
+
+def _slot_finish(server_params: Any, st: SlotStaged, *, conf_thresh: float,
+                 with_reuse: bool) -> FleetSlotOut:
+    """Stage B of the split slot step: the server detector forward on the
+    staged batch, box decode, greedy-F1 scoring of both arms and the
+    tx-masked log pack — the slot's dominant dispatch, consuming ONLY a
+    ``SlotStaged`` so it can trail the encode stage by one scan iteration."""
+    C, F, G = st.gt_e.shape[:3]
+    grid = det.forward(server_params, st.batch)
+    boxes, scores, valid = det.decode_boxes(grid, conf_thresh=conf_thresh)
+    K = boxes.shape[1]
+    f1_frames = det.f1_score_batch(
+        boxes[:C * F], valid[:C * F], st.gt_e.reshape(C * F, G, 4),
+        st.gv_e.reshape(C * F, G)).reshape(C, F)
+    f1 = jnp.sum(f1_frames * st.eval_w, axis=1)
+    if with_reuse:
+        # detection-reuse arm: the reuse frame's detections score every
+        # filtered-out frame's GT; miss_w rows are zero when the arm is off
+        rb = jnp.repeat(boxes[C * F:], F, axis=0)
+        rv = jnp.repeat(valid[C * F:], F, axis=0)
+        f1_miss = det.f1_score_batch(
+            rb, rv, st.gt_m.reshape(C * F, G, 4),
+            st.gv_m.reshape(C * F, G)).reshape(C, F)
+        f1 = (f1 * st.w_keep
+              + jnp.sum(f1_miss * st.miss_w, axis=1) * (1.0 - st.w_keep))
+    f1 = jnp.where(st.tx, f1, 0.0)
+    f1_frames = jnp.where(st.tx[:, None], f1_frames, 0.0)
+    sizes = jnp.where(st.tx, st.sizes, 0.0)
+    return FleetSlotOut(
+        f1=f1, f1_frames=f1_frames, sizes=sizes,
+        host_pack=jnp.stack([f1, sizes]),
+        boxes=boxes[:C * F].reshape(C, F, K, 4),
+        scores=scores[:C * F].reshape(C, F, K),
+        valid=valid[:C * F].reshape(C, F, K))
+
+
 def _slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
                masks: jax.Array, b: jax.Array, r: jax.Array, keys: jax.Array,
                keep: jax.Array, gt_boxes: jax.Array, gt_valid: jax.Array,
                live: jax.Array, *, eval_frames: int, block_size: int,
-               conf_thresh: float, with_reuse: bool,
+               conf_thresh: float, with_reuse: bool, use_kernel: bool = False,
                checked: bool = False) -> FleetSlotOut:
-    """The traced slot step for C cameras (C local under shard_map).
+    """The traced slot step for C cameras (C local under shard_map) —
+    ``_slot_encode`` composed with ``_slot_finish`` back to back (the fused
+    reference shape; the pipelined episode scan runs the two stages one slot
+    apart instead).
 
     frames (C,N,H,W); masks (C,H/bs,W/bs) bool; b, r (C,) traced; keys
     (C,2); keep (C,N) bool frame keep-flags (all-True for every non-reducto
@@ -348,61 +454,19 @@ def _slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
     the program entirely — the profiling sweep's batch shape is its own
     specialization anyway, so it skips the arm's dead detector/F1 work;
     ``run()`` always compiles with the arm so all four methods share one
-    executable.  ``checked`` inserts checkify invariants (trace static: the
-    default program carries no checkify code).
+    executable.  ``use_kernel`` routes the codec transform through the
+    fused pallas transmission kernel (float32-ulp parity with the vmapped
+    scalar path).  ``checked`` inserts checkify invariants (trace static:
+    the default program carries no checkify code) and forces the kernel off
+    (the oracle path is the diagnostics reference).
     """
-    C, N, H, W = frames.shape
-    G = gt_boxes.shape[2]
-    F = min(eval_frames, N)
-    sel = keep_selection(keep, F)
-
-    def encode_one(fr, mask, b_i, r_i, key_i, n_i):
-        cropped = roidet_mod.crop_to_mask(fr, mask, block_size)
-        roi_pixels = (jnp.sum(mask) * (block_size ** 2)).astype(jnp.float32)
-        return codec_mod.encode_segment(cfg, cropped, roi_pixels, b_i, r_i,
-                                        key_i, num_frames=n_i)
-
-    decoded, sizes = jax.vmap(encode_one)(frames, masks, b, r, keys,
-                                          sel.n_eff)
-    ev = jnp.take_along_axis(decoded, sel.eval_idx[:, :, None, None], axis=1)
-    batch = ev.reshape(C * F, H, W)
-    if with_reuse:
-        # reuse frames are RAW camera frames (the camera ran its own detector
-        # on them before filtering) — folded into the same server forward
-        reuse_fr = jnp.take_along_axis(
-            frames, sel.reuse_idx[:, None, None, None], axis=1)[:, 0]
-        batch = jnp.concatenate([batch, reuse_fr], axis=0)
-    grid = det.forward(server_params, batch)
-    boxes, scores, valid = det.decode_boxes(grid, conf_thresh=conf_thresh)
-    K = boxes.shape[1]
-
-    gt_e = jnp.take_along_axis(gt_boxes, sel.eval_idx[:, :, None, None],
-                               axis=1)
-    gv_e = jnp.take_along_axis(gt_valid, sel.eval_idx[:, :, None], axis=1)
-    f1_frames = det.f1_score_batch(
-        boxes[:C * F], valid[:C * F], gt_e.reshape(C * F, G, 4),
-        gv_e.reshape(C * F, G)).reshape(C, F)
-    f1 = jnp.sum(f1_frames * sel.eval_w, axis=1)
-    if with_reuse:
-        # detection-reuse arm: the reuse frame's detections score every
-        # filtered-out frame's GT; miss_w rows are zero when the arm is off
-        gt_m = jnp.take_along_axis(gt_boxes, sel.miss_idx[:, :, None, None],
-                                   axis=1)
-        gv_m = jnp.take_along_axis(gt_valid, sel.miss_idx[:, :, None], axis=1)
-        rb = jnp.repeat(boxes[C * F:], F, axis=0)
-        rv = jnp.repeat(valid[C * F:], F, axis=0)
-        f1_miss = det.f1_score_batch(
-            rb, rv, gt_m.reshape(C * F, G, 4),
-            gv_m.reshape(C * F, G)).reshape(C, F)
-        f1 = (f1 * sel.w_keep
-              + jnp.sum(f1_miss * sel.miss_w, axis=1) * (1.0 - sel.w_keep))
-    # the transmit mask: dead cameras and zero-allocation slots (a hard
-    # outage leaves every camera at b == 0) send nothing — zero bytes, zero
-    # F1 — while their dead compute keeps the program shape static
-    tx = jnp.asarray(live, bool) & (b > 0.0)
-    f1 = jnp.where(tx, f1, 0.0)
-    f1_frames = jnp.where(tx[:, None], f1_frames, 0.0)
-    sizes = jnp.where(tx, sizes, 0.0)
+    st = _slot_encode(cfg, frames, masks, b, r, keys, keep, gt_boxes,
+                      gt_valid, live, eval_frames=eval_frames,
+                      block_size=block_size, with_reuse=with_reuse,
+                      use_kernel=use_kernel and not checked)
+    out = _slot_finish(server_params, st, conf_thresh=conf_thresh,
+                       with_reuse=with_reuse)
+    f1, f1_frames, sizes, tx = out.f1, out.f1_frames, out.sizes, st.tx
     if checked:
         checkify.check(jnp.all(jnp.isfinite(f1)) & jnp.all(jnp.isfinite(sizes)),
                        "slot-step: non-finite F1 or size")
@@ -413,12 +477,7 @@ def _slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
                        "slot-step: keep mask row with no kept frame")
         checkify.check(jnp.all(jnp.where(tx[:, None], True, f1_frames == 0.0)),
                        "slot-step: non-transmitting camera produced F1")
-    return FleetSlotOut(
-        f1=f1, f1_frames=f1_frames, sizes=sizes,
-        host_pack=jnp.stack([f1, sizes]),
-        boxes=boxes[:C * F].reshape(C, F, K, 4),
-        scores=scores[:C * F].reshape(C, F, K),
-        valid=valid[:C * F].reshape(C, F, K))
+    return out
 
 
 # -- traced reducto keep-flags ------------------------------------------------
@@ -490,10 +549,11 @@ _COMPILE_COUNTS: Dict[Tuple, int] = {}
 def _build_executable(cache_key: Tuple, mesh: Optional[Mesh],
                       cfg: CodecConfig, eval_frames: int, block_size: int,
                       conf_thresh: float, donate: bool, with_reuse: bool,
-                      checked: bool):
+                      use_kernel: bool, checked: bool):
     impl = functools.partial(_slot_step, cfg, eval_frames=eval_frames,
                              block_size=block_size, conf_thresh=conf_thresh,
-                             with_reuse=with_reuse, checked=checked)
+                             with_reuse=with_reuse, use_kernel=use_kernel,
+                             checked=checked)
 
     def counted(*args):
         # this Python side effect runs exactly once per new jit
@@ -520,14 +580,14 @@ def _build_executable(cache_key: Tuple, mesh: Optional[Mesh],
 
 def _get_executable(mesh: Optional[Mesh], cfg: CodecConfig, eval_frames: int,
                     block_size: int, conf_thresh: float, donate: bool,
-                    with_reuse: bool, checked: bool):
+                    with_reuse: bool, use_kernel: bool, checked: bool):
     key = (mesh_cache_key(mesh), cfg, eval_frames, block_size, conf_thresh,
-           donate, with_reuse, checked)
+           donate, with_reuse, use_kernel, checked)
     fn = _EXEC_CACHE.get(key)
     if fn is None:
         fn = _EXEC_CACHE[key] = _build_executable(
             key, mesh, cfg, eval_frames, block_size, conf_thresh, donate,
-            with_reuse, checked)
+            with_reuse, use_kernel, checked)
     return fn
 
 
@@ -760,15 +820,19 @@ def fleet_slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
                     gt_valid: jax.Array, *, eval_frames: int, block_size: int,
                     conf_thresh: float = 0.4, mesh: Optional[Mesh] = None,
                     donate: bool = True, with_reuse: bool = True,
+                    use_kernel: bool = True,
                     live: Optional[jax.Array] = None, checked: bool = False
                     ) -> FleetSlotOut:
     """Dispatch the unified slot-step; pads C to the mesh size and slices
     the padding back off.  Returns device arrays WITHOUT blocking — callers
     fetch ``host_pack`` (one packed transfer) when they need the scalars.
     ``live`` is the slot's (C,) camera liveness mask (None = all live);
-    mesh-padding cameras are marked dead.  ``checked=True`` routes through
-    the checkify-instrumented executable and raises on any violated
-    invariant (a blocking D2H of the error flag — diagnostics lane only)."""
+    mesh-padding cameras are marked dead.  ``use_kernel`` routes the codec
+    transform through the fused pallas transmission kernel (float32-ulp
+    parity; ``SystemConfig.use_kernels`` threads here).  ``checked=True``
+    routes through the checkify-instrumented executable and raises on any
+    violated invariant (a blocking D2H of the error flag — diagnostics lane
+    only)."""
     C = frames.shape[0]
     if live is None:
         live = jnp.ones((C,), bool)
@@ -784,7 +848,8 @@ def fleet_slot_step(cfg: CodecConfig, server_params: Any, frames: jax.Array,
         gt_valid = pad_leading(gt_valid, C_pad)
         live = pad_leading(jnp.asarray(live, bool), C_pad, fill=False)
     fn = _get_executable(mesh, cfg, eval_frames, block_size, conf_thresh,
-                         donate and not checked, with_reuse, checked)
+                         donate and not checked, with_reuse,
+                         use_kernel and not checked, checked)
     with warnings.catch_warnings():
         # donated frame/GT buffers can't alias the (small) outputs; XLA still
         # recycles them for intermediates, which is the point — drop the nag
@@ -837,7 +902,8 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
                   use_elastic: bool, use_kernel: bool, w_cap: int,
                   num_cams: int, c_pad: int, eval_frames: int,
                   block_size: int, conf_thresh: float, gt_pad: int,
-                  sharded: bool, checked: bool = False) -> EpisodeOut:
+                  sharded: bool, checked: bool = False,
+                  pipelined: bool = True) -> EpisodeOut:
     """One whole bandwidth trace as ONE traced program (runs per-device
     under shard_map when ``sharded``): ``lax.scan`` of segment-gen ->
     ROIDet -> control -> keep -> slot-step over the (T,) trace.  Carry:
@@ -872,7 +938,15 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
     ``all_gather``-ed over the "camera" axis and the control program runs
     replicated (pure-jnp DP — ``use_kernel=False`` — so replication costs
     redundant flops, not N interpret-mode kernel emulations), each device
-    slicing its own cameras' (b, r) back out."""
+    slicing its own cameras' (b, r) back out.
+
+    ``pipelined=True`` restructures the scan body into the 2-stage software
+    pipeline (slot i's encode overlapping slot i-1's detector dispatch,
+    cond-skipped padded slots, compacted live-camera detector batches — see
+    the inline comments at the scan bodies below); the carry/harvest
+    contracts above hold identically for both bodies, and the reference
+    body (``pipelined=False``, always used when ``checked``) is what the
+    pipeline differential proves the pipelined program against."""
     N, H, W = scfg.frames_per_segment, scfg.height, scfg.width
     n_local = scene_params.backgrounds.shape[0]   # == c_pad / D under shard_map
     if checked:
@@ -895,9 +969,21 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
         i = jax.lax.axis_index("camera")
         return jax.lax.dynamic_slice_in_dim(x, i * n_local, n_local, 0)
 
-    def step(carry, xs):
-        est, ref, live_prev = carry
-        t, W_t, live_t, active_t = xs
+    # the reuse arm is a per-METHOD static here (episodes compile one
+    # executable per method anyway): only reducto's filtered frames need
+    # the reuse detection, so the other three methods drop the C extra
+    # detector rows from the batch — exact (all-True keep => w_keep == 1,
+    # the arm is numerically inert) and statically cheaper
+    with_reuse = (method == "reducto")
+    F = min(eval_frames, N)
+
+    def slot_front(est, ref, live_prev, t, W_t, live_t):
+        """Everything UP TO the staged detector batch for one slot:
+        synth -> ROIDet -> control -> keep -> (compacted) encode.  Returns
+        (new est, new ref, staged, control pack, inverse camera permutation)
+        — the carry-advance plus the ``SlotStaged`` handoff ``_slot_finish``
+        consumes (this iteration in the reference body, the NEXT iteration
+        in the pipelined one)."""
         frames, gtb, gtv = synth_mod.segments_device(
             scfg, scene_params, skey, t, gt_pad=gt_pad)
         keys_l = slot_camera_keys(key0, t, scene_params.cam_ids)
@@ -936,29 +1022,148 @@ def _episode_impl(server_params, light_params, mlp_params, jcab_util,
             # per-camera "first" too (its reference went stale while dead)
             first = (jnp.broadcast_to(t == t_first, (n_local,))
                      | scatter(reconnect_g, False))
-            keep, ref = _reducto_keep_impl(
+            keep, new_ref = _reducto_keep_impl(
                 frames, ref, first, block_size=block_size,
                 edge_thresh=roidet_mod.EDGE_THRESH, use_kernel=use_kernel)
         else:
             keep = jnp.ones((n_local, N), bool)
-        out = _slot_step(ccfg, server_params, frames, masks, b_l, r_l,
-                         keys_l, keep, gtb, gtv, live_l,
-                         eval_frames=eval_frames,
-                         block_size=block_size, conf_thresh=conf_thresh,
-                         with_reuse=True, checked=checked)
-        # padded tail slots FREEZE the whole carry (est, reducto ref,
-        # liveness row): the final scan carry is then exactly the last
-        # ACTIVE slot's state — the handoff a windowed stream checkpoints
-        # and reloads, with no stacked-carry gather needed
-        new_c, old_c = (co.est, ref, live_t), (est, ref, live_prev)
-        frozen = jax.tree.map(
-            lambda n, o: jnp.where(active_t, n, o), new_c, old_c)
-        return frozen, (out.host_pack, co.pack)
+            new_ref = ref
+        if pipelined:
+            # dead-compute masking, camera axis: a stable live-first
+            # argsort COMPACTS the slot's live cameras to the leading rows
+            # and ZEROES the dead rows' frames before they enter the
+            # encode/detector batch — dead cameras ride through as inert
+            # zero tiles instead of full dead-frame compute.  Exact for
+            # live cameras (every slot-step stage is camera-row-local, so
+            # a row permutation permutes outputs bitwise) and for dead
+            # ones (their f1/size entries are tx-masked to zero either
+            # way); ``inv`` scatters the host_pack columns back to the
+            # original camera order at finish time.
+            order = jnp.argsort(~live_l, stable=True)
+            inv = jnp.argsort(order, stable=True).astype(jnp.int32)
+            live_e = live_l[order]
+            frames_e = jnp.where(live_e[:, None, None, None],
+                                 frames[order], 0.0)
+            st = _slot_encode(
+                ccfg, frames_e, masks[order], b_l[order], r_l[order],
+                keys_l[order], keep[order], gtb[order], gtv[order], live_e,
+                eval_frames=eval_frames, block_size=block_size,
+                with_reuse=with_reuse, use_kernel=use_kernel and not checked)
+        else:
+            inv = jnp.arange(n_local, dtype=jnp.int32)
+            st = _slot_encode(
+                ccfg, frames, masks, b_l, r_l, keys_l, keep, gtb, gtv,
+                live_l, eval_frames=eval_frames, block_size=block_size,
+                with_reuse=with_reuse, use_kernel=use_kernel and not checked)
+        return co.est, new_ref, st, co.pack, inv
 
-    (est, ref_out, _), (packs, cpacks) = jax.lax.scan(
-        step, (est0, ref0, live_prev0), (t_idx, trace, live_tr, active))
-    return EpisodeOut(packs=packs, cpacks=cpacks, key=key0, est=est,
-                      ref=ref_out)
+    if not pipelined:
+        # the FUSED reference body (also the checked/diagnostics program):
+        # one slot's front and finish back to back, padded tail slots
+        # frozen with jnp.where — the differential baseline the pipelined
+        # program is proven against
+        def step(carry, xs):
+            est, ref, live_prev = carry
+            t, W_t, live_t, active_t = xs
+            est2, ref2, st, cpack, _ = slot_front(
+                est, ref, live_prev, t, W_t, live_t)
+            out = _slot_finish(server_params, st, conf_thresh=conf_thresh,
+                               with_reuse=with_reuse)
+            if checked:
+                checkify.check(
+                    jnp.all(jnp.isfinite(out.f1))
+                    & jnp.all(jnp.isfinite(out.sizes)),
+                    "episode slot-step: non-finite F1 or size")
+            # padded tail slots FREEZE the whole carry (est, reducto ref,
+            # liveness row): the final scan carry is then exactly the last
+            # ACTIVE slot's state — the handoff a windowed stream
+            # checkpoints and reloads, with no stacked-carry gather needed
+            new_c, old_c = (est2, ref2, live_t), (est, ref, live_prev)
+            frozen = jax.tree.map(
+                lambda n, o: jnp.where(active_t, n, o), new_c, old_c)
+            return frozen, (out.host_pack, cpack)
+
+        (est, ref_out, _), (packs, cpacks) = jax.lax.scan(
+            step, (est0, ref0, live_prev0), (t_idx, trace, live_tr, active))
+        return EpisodeOut(packs=packs, cpacks=cpacks, key=key0, est=est,
+                          ref=ref_out)
+
+    # -- the SOFTWARE-PIPELINED scan body (the production episode) --------
+    # Two stages, one slot apart: iteration i runs slot i's front (synth ->
+    # control -> keep -> encode, stage A) AND slot i-1's finish (detector
+    # forward -> F1, stage B).  The stages share no data within an
+    # iteration — stage B reads only the CARRIED SlotStaged — so XLA can
+    # overlap slot i-1's detector dispatch with slot i's encode.  The scan
+    # runs T_b + 1 iterations over INTERNALLY extended xs (one trailing
+    # inactive row drains the pipeline); ys row i holds slot i-1's logs, so
+    # the leading warmup row is sliced off below and the stacked outputs
+    # keep their (T_b, ...) harvest shape — the two-fetch audit contract is
+    # untouched.  Carry freezing moves from jnp.where to lax.cond: an
+    # inactive slot SKIPS stage A outright (dead-compute masking, slot
+    # axis) and passes every carry leaf through unchanged, which is the
+    # same frozen-carry contract by construction; its staged slot is marked
+    # invalid so stage B emits zero log rows for it (the caller's [:T]
+    # slice discards them, exactly as it discarded the reference body's
+    # dead-input rows).
+    C_det = n_local * F + (n_local if with_reuse else 0)
+    G = gt_pad
+    zeros_staged = SlotStaged(
+        batch=jnp.zeros((C_det, H, W), jnp.float32),
+        gt_e=jnp.zeros((n_local, F, G, 4), jnp.float32),
+        gv_e=jnp.zeros((n_local, F, G), bool),
+        gt_m=(jnp.zeros((n_local, F, G, 4), jnp.float32) if with_reuse
+              else None),
+        gv_m=(jnp.zeros((n_local, F, G), bool) if with_reuse else None),
+        eval_w=jnp.zeros((n_local, F), jnp.float32),
+        miss_w=jnp.zeros((n_local, F), jnp.float32),
+        w_keep=jnp.zeros((n_local,), jnp.float32),
+        sizes=jnp.zeros((n_local,), jnp.float32),
+        tx=jnp.zeros((n_local,), bool))
+
+    def pipe_step(carry, xs):
+        est, ref, live_prev, (st_p, cp_p, inv_p, valid_p) = carry
+        t, W_t, live_t, active_t = xs
+
+        # stage B: finish the PREVIOUS slot's staged batch (warmup and
+        # drained-pipeline iterations emit zero rows)
+        def finish_prev(_):
+            out = _slot_finish(server_params, st_p, conf_thresh=conf_thresh,
+                               with_reuse=with_reuse)
+            return out.host_pack[:, inv_p], cp_p
+
+        def finish_none(_):
+            return (jnp.zeros((2, n_local), jnp.float32),
+                    jnp.zeros((4,), jnp.float32))
+
+        ys = jax.lax.cond(valid_p, finish_prev, finish_none, None)
+
+        # stage A: front the CURRENT slot — skipped entirely for padded
+        # tail slots (the cond IS the carry freeze: every leaf passes
+        # through untouched)
+        def front_live(_):
+            est2, ref2, st, cpack, inv = slot_front(
+                est, ref, live_prev, t, W_t, live_t)
+            return est2, ref2, live_t, (st, cpack, inv, jnp.asarray(True))
+
+        def front_dead(_):
+            return est, ref, live_prev, (st_p, cp_p, inv_p,
+                                         jnp.asarray(False))
+
+        return jax.lax.cond(active_t, front_live, front_dead, None), ys
+
+    ext = lambda x, row: jnp.concatenate([x, row[None]], axis=0)
+    xs_ext = (ext(t_idx, t_idx[-1]), ext(trace, jnp.zeros((), trace.dtype)),
+              ext(live_tr, jnp.ones((num_cams,), bool)),
+              ext(active, jnp.zeros((), bool)))
+    init = (est0, ref0, live_prev0,
+            (zeros_staged, jnp.zeros((4,), jnp.float32),
+             jnp.arange(n_local, dtype=jnp.int32), jnp.asarray(False)))
+    (est, ref_out, _, _), (packs_x, cpacks_x) = jax.lax.scan(
+        pipe_step, init, xs_ext)
+    # drop the warmup row INSIDE the program: the harvested out_avals stay
+    # (T_b, 2, C)/(T_b, 4) — same two stacked fetches, same audit shape
+    return EpisodeOut(packs=packs_x[1:], cpacks=cpacks_x[1:], key=key0,
+                      est=est, ref=ref_out)
 
 
 def _get_episode_executable(mesh: Optional[Mesh], **statics):
@@ -1004,8 +1209,19 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
                   faults: Optional[np.ndarray] = None, checked: bool = False,
                   ref0: Optional[jax.Array] = None,
                   live_prev0: Optional[np.ndarray] = None,
-                  t_first: Optional[int] = None) -> EpisodeOut:
+                  t_first: Optional[int] = None,
+                  pipelined: bool = True) -> EpisodeOut:
     """Dispatch a WHOLE bandwidth trace as one compiled episode.
+
+    ``pipelined=True`` (the default, and the production program) runs the
+    scan body as a 2-stage software pipeline: iteration i overlaps slot i's
+    encode stage with slot i-1's detector/score stage, with padded tail
+    slots skipped by ``lax.cond`` and each slot's dead cameras compacted
+    out of the detector batch (see ``_episode_impl``).  ``pipelined=False``
+    is the fused reference body the pipeline is differentialed against
+    (logs equal to <= 1e-5; measured exactly equal); ``checked=True``
+    always uses the reference body — the diagnostics lane instruments the
+    simplest program.
 
     ``faults`` is the optional (T, C) bool liveness mask (True = live;
     None = all live).  It is ALWAYS scanned — as an all-True array when no
@@ -1102,7 +1318,8 @@ def fleet_episode(method: str, *, codec_cfg: CodecConfig,
         w_cap=int(w_cap), num_cams=int(num_cams), c_pad=int(C_pad),
         eval_frames=int(eval_frames), block_size=int(block_size),
         conf_thresh=float(conf_thresh), gt_pad=int(gt_pad),
-        sharded=mesh is not None, checked=bool(checked))
+        sharded=mesh is not None, checked=bool(checked),
+        pipelined=bool(pipelined) and not bool(checked))
     # slot indices continue from the scene's cursor (t_start) — data values,
     # not statics, so resumed episodes reuse the same executable; t_first
     # marks the STREAM's first slot (reducto's reference-reset rule —

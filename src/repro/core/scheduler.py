@@ -171,6 +171,11 @@ class SystemConfig:
     donate: bool = True                       # donate per-slot fleet buffers
     alloc: str = "device"                     # control loop: "device" | "host"
     episode: bool = False                     # whole-trace lax.scan episodes
+    # software-pipelined episode scan body (2-stage: slot t's detector
+    # dispatch overlaps slot t+1's encode; padded slots cond-skipped, dead
+    # cameras compacted out of the detector batch).  False runs the fused
+    # reference body — the differential baseline; checked runs always do.
+    episode_pipelined: bool = True
     # trace-length buckets for episode mode: T pads up to the smallest
     # bucket (masked tail slots, see fleet.bucket_len for the contract) so
     # ONE compiled episode per (method, bucket) serves every trace length.
@@ -386,7 +391,8 @@ class DeepStreamSystem:
             jnp.asarray(gt_boxes), jnp.asarray(gt_valid),
             eval_frames=self.cfg.eval_frames, block_size=self.cfg.block_size,
             mesh=self.mesh, donate=self.cfg.donate, with_reuse=with_reuse,
-            live=live, checked=self.cfg.checked)
+            use_kernel=self.cfg.use_kernels, live=live,
+            checked=self.cfg.checked)
         self._t("fleet", t0)
         return out
 
@@ -653,6 +659,7 @@ class DeepStreamSystem:
             t_start=scene._t, mesh=self.mesh,
             buckets=self.cfg.episode_buckets, faults=faults,
             checked=self.cfg.checked,
+            pipelined=self.cfg.episode_pipelined,
             ref0=None if carry is None else carry.ref,
             live_prev0=None if carry is None else carry.live_prev,
             t_first=None if carry is None else carry.t_first)
@@ -1070,12 +1077,15 @@ class SupervisorConfig:
     ``backoff_s`` is the base of an exponential retry backoff (0 = retry
     immediately — the default, since a failed jit dispatch has no cooldown
     to wait out); ``degrade`` allows falling down the mode ladder when
-    retries are exhausted or the watchdog escalates; ``watchdog``
-    parameterizes the EMA+sigma straggler gate (``ft.watchdog``) fed with
-    per-run wall times."""
+    retries are exhausted or the watchdog escalates; ``recover_after`` is
+    how many consecutive healthy ('ok' verdict) runs at a degraded rung
+    climb back one rung (0 disables recovery — rungs stay sticky);
+    ``watchdog`` parameterizes the EMA+sigma straggler gate
+    (``ft.watchdog``) fed with per-run wall times."""
     max_retries: int = 2
     backoff_s: float = 0.0
     degrade: bool = True
+    recover_after: int = 3
     watchdog: ft_watchdog.WatchdogConfig = field(
         default_factory=ft_watchdog.WatchdogConfig)
 
@@ -1100,9 +1110,17 @@ class EpisodeSupervisor:
     current rung, then the supervisor degrades one rung (when
     ``cfg.degrade``) and retries there; a run whose wall time trips the
     watchdog's ``'replace'`` verdict degrades the NEXT run preemptively.
-    Rungs are sticky across runs (``self._rung``) — a degraded fleet stays
-    degraded until the caller resets it.  Every decision is appended to
-    ``self.events`` for tests and post-mortems.
+    Rungs are sticky across runs (``self._rung``), and a degraded fleet
+    climbs BACK one rung after ``cfg.recover_after`` consecutive healthy
+    runs at the degraded rung (a ``'recover'`` event; 0 disables and makes
+    degradation permanent until the caller resets it).  EVERY rung change
+    — watchdog degrade, retries-exhausted degrade, or recovery —
+    rebaselines the watchdog (``Watchdog.rebaseline``): the step-time
+    distribution shifts wholesale across modes, so the new rung's EMA must
+    never be seeded from the old rung's timings (a recovered runner gated
+    against its degraded-rung baseline would either instantly re-trip or
+    mask real stragglers).  Every decision is appended to ``self.events``
+    for tests and post-mortems.
 
     ``fault_hook(attempt=, mode=)`` (tests/chaos injection) runs right
     before each dispatch; raising from it counts as that attempt failing.
@@ -1120,6 +1138,7 @@ class EpisodeSupervisor:
         self.events: List[Dict[str, Any]] = []
         self._step = 0          # watchdog step counter (successful runs)
         self._rung = 0          # current position on the mode ladder
+        self._ok_streak = 0     # consecutive healthy runs at a degraded rung
 
     @property
     def mode(self) -> str:
@@ -1165,12 +1184,32 @@ class EpisodeSupervisor:
                     # persistent straggling at this rung: degrade the NEXT
                     # run preemptively (this one already succeeded)
                     self._rung = rung + 1
+                    self._ok_streak = 0
+                    self.watchdog.rebaseline()
                     self.events.append({"kind": "degrade", "mode": mode,
                                         "to": ladder[self._rung],
                                         "cause": "watchdog"})
+                elif (verdict == "ok" and rung > 0
+                        and self.cfg.recover_after > 0):
+                    self._ok_streak += 1
+                    if self._ok_streak >= self.cfg.recover_after:
+                        # sustained health at the degraded rung: climb back
+                        # one rung, gating its first steps against a FRESH
+                        # baseline (not the degraded rung's timings)
+                        self._rung = rung - 1
+                        self._ok_streak = 0
+                        self.watchdog.rebaseline()
+                        self.events.append({"kind": "recover", "mode": mode,
+                                            "to": ladder[self._rung],
+                                            "after_ok":
+                                                self.cfg.recover_after})
+                else:
+                    self._ok_streak = 0
                 return logs
             if self.cfg.degrade and rung + 1 < len(ladder):
                 self._rung = rung + 1
+                self._ok_streak = 0
+                self.watchdog.rebaseline()
                 self.events.append({"kind": "degrade", "mode": mode,
                                     "to": ladder[self._rung],
                                     "cause": "retries_exhausted"})

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the fused transmission/codec kernel.
+
+The oracle IS the per-camera codec path the fleet used before the kernel
+existed: ``codec.encode_segment`` (or ``encode_segment_crf``) vmapped over
+the camera axis — including ``_select_resolution``'s compute-all-branches
+blur select and the per-camera ``jax.random.normal`` draw.  Kernel parity
+against this oracle is therefore parity against the golden-pinned fleet
+numerics, to the bit.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core import codec as codec_mod
+
+
+def encode_fleet_ref(cfg, frames: jax.Array, roi_pixels: jax.Array,
+                     bitrate_kbps: jax.Array, res: jax.Array,
+                     keys: jax.Array, num_frames: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Bitrate mode: frames (C, N, H, W), per-camera scalars (C,), keys
+    (C, 2) -> (decoded (C, N, H, W), size_bytes (C,))."""
+    def one(fr, pix, b, r, key, n):
+        return codec_mod.encode_segment(cfg, fr, pix, b, r, key,
+                                        num_frames=n)
+    if num_frames is None:
+        return jax.vmap(lambda fr, pix, b, r, key: codec_mod.encode_segment(
+            cfg, fr, pix, b, r, key))(frames, roi_pixels, bitrate_kbps, res,
+                                      keys)
+    return jax.vmap(one)(frames, roi_pixels, bitrate_kbps, res, keys,
+                         num_frames)
+
+
+def encode_fleet_crf_ref(cfg, frames: jax.Array, roi_pixels: jax.Array,
+                         keys: jax.Array, res: Optional[jax.Array] = None,
+                         num_frames: Optional[jax.Array] = None
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """CRF mode: same batching; ``res=None`` skips the blur select exactly
+    like the scalar ``encode_segment_crf`` does."""
+    def one(fr, pix, key, r, n):
+        return codec_mod.encode_segment_crf(cfg, fr, pix, key, res=r,
+                                            num_frames=n)
+    C = frames.shape[0]
+    import jax.numpy as jnp
+    n = (jnp.full((C,), frames.shape[1], jnp.float32)
+         if num_frames is None else num_frames)
+    if res is None:
+        return jax.vmap(lambda fr, pix, key, ni: codec_mod.encode_segment_crf(
+            cfg, fr, pix, key, num_frames=ni))(frames, roi_pixels, keys, n)
+    return jax.vmap(one)(frames, roi_pixels, keys, res, n)

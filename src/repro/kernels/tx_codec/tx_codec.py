@@ -1,0 +1,101 @@
+"""Pallas kernel: fused transmission/codec frame transform, camera-batched.
+
+The rate-distortion codec simulator (``core.codec``) is the episode's
+measured transmission hot spot: per camera it (1) computes ALL THREE
+resolution-blur variants of the segment and indexes the nearest one
+(``_select_resolution`` — a static unroll whose two losing branches are
+pure dead work), then (2) quantizes, (3) adds coding noise and (4) clips —
+four full-segment passes whose intermediates round-trip HBM between ops.
+
+This kernel is that transform as ONE VMEM pass per camera: the segment
+tile loads once, ``lax.switch`` computes ONLY the selected blur branch
+(eliminating the 2/3 dead blur work), and quantize+noise+clip happen in
+registers before the single write-back.  The per-camera SCALAR
+rate-distortion terms (bpp, quantization levels, noise sigma, branch
+index) and the PRNG noise draw stay in the caller (``ops.py``) — scalars
+are free, and drawing ``jax.random.normal`` outside keeps the kernel
+deterministic data-in/data-out with the exact bits the vmapped reference
+draws.
+
+Grid = (C,): one program per camera, each consuming its whole (N, H, W)
+segment plus the matching noise tile and (1, 1) scalar blocks.  VMEM per
+program: 2 x N x H x W x 4B (~0.5 MB for N=4, 128x128 frames) — well
+inside budget, MXU-free (elementwise + small pooling reshapes).
+
+Parity vs the oracle (``ref.py`` == vmapped ``codec.encode_segment``):
+the blur branches replicate ``codec._resolution_blur`` with
+``jnp.repeat`` upsampling (identical floats to the oracle's
+kron-with-ones — multiplying by 1.0 is exact), and branch selection via
+``lax.switch`` computes the same selected values the oracle's
+stack-then-index does.  The ONE permitted deviation is float32-ulp scale:
+XLA may fuse ``x + sigma * noise`` into an FMA on one side of the pallas
+boundary and not the other, so outputs agree to ~1 ulp (<= 1e-6, asserted
+by the parity tests), not bitwise — far inside every 1e-5 log contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _blur_branch(frames: jax.Array, *, res: float) -> jax.Array:
+    """``codec._resolution_blur`` for one STATIC resolution: avg-pool by k,
+    nearest upsample (repeat == kron-with-ones bitwise), edge-pad the
+    pooling-cropped tail."""
+    if res >= 0.999:
+        return frames
+    k = 2 if res > 0.6 else 4 if res > 0.3 else 8
+    N, H, W = frames.shape
+    small = frames[:, :H // k * k, :W // k * k].reshape(
+        N, H // k, k, W // k, k).mean(axis=(2, 4))
+    up = jnp.repeat(jnp.repeat(small, k, axis=1), k, axis=2)
+    up = jnp.pad(up, ((0, 0), (0, max(H - up.shape[1], 0)),
+                      (0, max(W - up.shape[2], 0))), mode="edge")
+    return up[:, :H, :W]
+
+
+def _tx_codec_kernel(fr_ref, nz_ref, lv_ref, sg_ref, ri_ref, out_ref, *,
+                     resolutions: Tuple[float, ...]):
+    fr = fr_ref[0]                       # (N, H, W)
+    nz = nz_ref[0]
+    lv = lv_ref[0, 0]                    # quantization levels
+    sg = sg_ref[0, 0]                    # coding-noise sigma
+    ri = ri_ref[0, 0]                    # selected resolution branch
+
+    # ONE blur branch, selected at runtime — not all three
+    x = jax.lax.switch(
+        ri, [functools.partial(_blur_branch, res=r) for r in resolutions],
+        fr)
+    x = jnp.round(x * lv) / lv           # quantization
+    x = x + sg * nz                      # additive coding noise
+    out_ref[0] = jnp.clip(x, 0.0, 1.0)
+
+
+def tx_codec_pallas(frames: jax.Array, noise: jax.Array, levels: jax.Array,
+                    sigma: jax.Array, ridx: jax.Array, *,
+                    resolutions: Tuple[float, ...],
+                    interpret: bool = True) -> jax.Array:
+    """frames/noise (C, N, H, W); levels/sigma (C,) f32; ridx (C,) int32.
+    Returns the decoded segments (C, N, H, W)."""
+    C, N, H, W = frames.shape
+    kernel = functools.partial(_tx_codec_kernel,
+                               resolutions=tuple(resolutions))
+    return pl.pallas_call(
+        kernel,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, N, H, W), lambda c: (c, 0, 0, 0)),
+            pl.BlockSpec((1, N, H, W), lambda c: (c, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda c: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N, H, W), lambda c: (c, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, N, H, W), jnp.float32),
+        interpret=interpret,
+    )(frames, noise, levels.reshape(C, 1), sigma.reshape(C, 1),
+      ridx.reshape(C, 1))

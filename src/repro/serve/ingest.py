@@ -41,7 +41,10 @@ stream is declared dead, not silently hung).
     the early arrivals).  Exactly recoverable within the window.
   * *Gaps* — when the sequencer is forced ``reorder_window`` slots past a
     missing slot (or the stream flushes), the hole is GAP-FILLED by the
-    declared policy: bandwidth = hold-last-emitted (0.0 before any), and a
+    declared policy: bandwidth = hold-last-emitted (``FILL_FLOOR_KBPS`` —
+    the codec ladder's minimum rung — before the first real record, so a
+    start-of-stream gap still feeds the allocator a schedulable slot
+    instead of a zero-bandwidth row), and a
     maximally-dead liveness row.  NOTE: the fleet's control step requires
     >= 1 live camera per slot (``fleet_episode`` rejects all-dead rows), so
     "maximally dead" keeps only the anchor camera 0 alive — the closest
@@ -75,6 +78,11 @@ import numpy as np
 # bandwidth above this is declared absurd and quarantined: two decades above
 # the scenario catalog's largest opening (spike family peaks at 6 Mbps)
 DEFAULT_MAX_KBPS = 1e6
+
+# gap-fill bandwidth before the FIRST real record: hold-last has nothing to
+# hold at stream start, so fills floor at the codec bitrate ladder's minimum
+# rung (CodecConfig.bitrates_kbps[0]) — never an uninitialized/zero row
+FILL_FLOOR_KBPS = 50.0
 
 
 class SourceStalled(RuntimeError):
@@ -195,8 +203,11 @@ class SocketLineSource:
     Connects lazily with exponential-backoff retries (``connect_retries``
     polls of ``Backoff`` delays — an ingest process that starts before its
     feeder must wait, not die); each poll does one short-timeout ``recv``
-    and reassembles complete lines across packet boundaries.  A closed peer
-    marks the source exhausted."""
+    and reassembles complete lines across packet boundaries.  A dead socket
+    (``recv`` raising ``OSError``) is closed immediately and the next poll
+    reconnects from scratch — exactly one fd is ever live, and a successful
+    reconnect resets the backoff ladder to its initial delay.  A closed
+    peer marks the source exhausted."""
 
     def __init__(self, host: str, port: int, *, recv_timeout: float = 0.05,
                  connect_retries: int = 20, backoff: Optional["Backoff"] = None,
@@ -236,6 +247,11 @@ class SocketLineSource:
         except socket.timeout:
             raise SourceTimeout(f"recv timed out after {self.recv_timeout}s")
         except OSError as e:
+            # the socket is dead: close it NOW (no fd leak) and null it so
+            # the next poll reconnects via _connect(), whose success path
+            # resets the backoff ladder to its initial delay
+            self._sock.close()
+            self._sock = None
             raise SourceTimeout(f"recv failed: {e}")
         if chunk == b"":
             self._closed = True     # peer closed: stream complete
@@ -360,8 +376,9 @@ class IngestConfig:
 class SlotSequencer:
     """Slot-sequence tracking over validated records: dedupes duplicates,
     reorders bounded out-of-order arrivals, gap-fills holes by the declared
-    policy (hold-last bandwidth + anchor-only liveness; see the module
-    docstring).  Emits ``(t, kbps, live_row)`` strictly in slot order.
+    policy (hold-last bandwidth — ``FILL_FLOOR_KBPS`` before the first real
+    record — + anchor-only liveness; see the module docstring).  Emits
+    ``(t, kbps, live_row)`` strictly in slot order.
 
     ``on_event(kind, **info)`` fires for every non-clean decision
     (``duplicate`` / ``out_of_order`` / ``gap_fill``) so the runner's event
@@ -381,7 +398,9 @@ class SlotSequencer:
         self.out_of_order = 0
         self.gap_filled = 0
         self.gap_slots: List[int] = []
-        self._last_kbps = 0.0            # hold-last fill value
+        # hold-last fill value; floored before the first real record so a
+        # start-of-stream gap emits a schedulable (non-zero) bandwidth row
+        self._last_kbps = FILL_FLOOR_KBPS
 
     def _fill_row(self) -> Tuple[float, np.ndarray]:
         live = np.zeros(self.num_cams, bool)

@@ -58,6 +58,10 @@ LANES = {
     "audit": [
         "tests/test_audit.py",
     ],
+    "pipeline": [
+        "tests/test_pipeline.py",
+        "tests/test_kernels.py",
+    ],
     "chaos": [
         "tests/test_chaos.py",
         "tests/test_ingest.py",

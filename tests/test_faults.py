@@ -364,8 +364,13 @@ def test_supervisor_chunked_matches_episode_for_stateless_method(systems):
 
 def test_supervisor_watchdog_replace_degrades_next_run(systems):
     class _AlwaysReplace:
+        rebaselines = 0
+
         def record(self, step, t):
             return "replace"
+
+        def rebaseline(self):
+            self.rebaselines += 1
 
     sup = sched_mod.EpisodeSupervisor(systems["episode"])
     sup.watchdog = _AlwaysReplace()
@@ -378,6 +383,8 @@ def test_supervisor_watchdog_replace_degrades_next_run(systems):
     deg = [e for e in sup.events if e["kind"] == "degrade"]
     assert deg and deg[0]["cause"] == "watchdog"
     assert sup.mode == "episode_chunked"
+    # the degraded rung starts from a fresh watchdog baseline
+    assert sup.watchdog.rebaselines == 1
 
 
 def test_supervisor_exhausts_ladder_and_raises(systems):

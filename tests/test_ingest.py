@@ -111,6 +111,32 @@ def test_sequencer_gap_fill_policy():
     assert out[4][1] == 104.0
 
 
+def test_sequencer_start_gap_fills_floor_kbps():
+    """Regression: a gap BEFORE the first real record has nothing to
+    hold-last — fills must emit the documented floor kbps (the codec
+    ladder's minimum rung) + the anchor-only liveness row, never an
+    uninitialized/zero-bandwidth row."""
+    seq = ing.SlotSequencer(3, reorder_window=1)
+    out = seq.push(ing.SlotRecord(2, 777.0, (True, True, True)))
+    assert [o[0] for o in out] == [0, 1, 2]
+    for o in out[:2]:
+        assert o[1] == ing.FILL_FLOOR_KBPS and o[1] > 0.0
+        assert o[2][0] and not o[2][1:].any()   # anchor-only row
+    assert out[2][1] == 777.0                   # real record untouched
+    assert seq.gap_slots == [0, 1]
+    # once a real record lands, hold-last takes over from the floor
+    out2 = seq.push(ing.SlotRecord(5, 888.0, (True, True, True)))
+    assert [o[1] for o in out2] == [777.0, 777.0, 888.0]
+
+
+def test_sequencer_flush_at_start_floors():
+    """A stream that dies before ANY record still fills schedulable rows."""
+    seq = ing.SlotSequencer(2)
+    out = seq.flush(until_t=3)
+    assert [o[0] for o in out] == [0, 1, 2]
+    assert [o[1] for o in out] == [ing.FILL_FLOOR_KBPS] * 3
+
+
 def test_sequencer_flush_fills_tail():
     seq = ing.SlotSequencer(2, reorder_window=4)
     out = _push_all(seq, [0, 2])          # 1 missing, 2 held
@@ -184,6 +210,58 @@ def test_socket_source_connect_backoff_exhausts():
     with pytest.raises(ing.SourceStalled, match="could not connect"):
         src.read_lines()
     assert len(sleeps) == 3 and sleeps[1] > sleeps[0]
+
+
+def test_socket_source_flap_reconnect(monkeypatch):
+    """Regression: a mid-stream dead socket (``recv`` -> OSError) must be
+    closed immediately (no fd leak) and the NEXT poll must reconnect from
+    scratch, with the successful reconnect resetting the backoff ladder so
+    the delay returns to ``initial``."""
+    opened = []
+
+    class FakeSock:
+        def __init__(self, payloads):
+            self._payloads = list(payloads)
+            self.closed = False
+            opened.append(self)
+
+        def settimeout(self, t):
+            pass
+
+        def recv(self, n):
+            if not self._payloads:
+                raise OSError("connection reset by peer")
+            return self._payloads.pop(0)
+
+        def close(self):
+            self.closed = True
+
+    plan = [[b"0 100.0 11\n"], [b"1 200.0 11\n", b""]]
+    dials = {"n": 0}
+
+    def fake_connect(addr, timeout=None):
+        dials["n"] += 1
+        if dials["n"] == 2:          # first re-dial fails: backoff consumed
+            raise OSError("refused")
+        return FakeSock(plan.pop(0))
+
+    monkeypatch.setattr(ing.socket, "create_connection", fake_connect)
+    sleeps = []
+    b = ing.Backoff(initial=0.001, factor=2.0, ceiling=0.25)
+    src = ing.SocketLineSource("flaky-host", 1, backoff=b,
+                               sleep_fn=sleeps.append)
+    assert src.read_lines() == ["0 100.0 11"]
+    # the link dies: the error surfaces as a retryable timeout AND the dead
+    # socket is closed on the spot
+    with pytest.raises(ing.SourceTimeout, match="recv failed"):
+        src.read_lines()
+    assert opened[0].closed and src._sock is None
+    # next poll reconnects (one failed dial, then success) and resumes
+    assert src.read_lines() == ["1 200.0 11"]
+    assert [s.closed for s in opened] == [True, False]   # one live fd
+    assert len(sleeps) == 1                              # the failed dial
+    assert b.next() == b.initial     # reconnect reset the ladder
+    assert src.read_lines() == [] and src.exhausted()    # peer closed
 
 
 # -- the ingest pipeline against the runner ------------------------------------

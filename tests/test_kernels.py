@@ -148,3 +148,120 @@ def test_flash_decode_with_new_token(rng):
                                             force_kernel=True)
     np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want), atol=1e-5)
     np.testing.assert_allclose(np.asarray(got_kern), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tx_codec (fused transmission/codec kernel)
+# ---------------------------------------------------------------------------
+
+from repro.core.codec import CodecConfig
+from repro.kernels.tx_codec import ops as tx_ops
+from repro.kernels.tx_codec import ref as tx_ref
+
+# kernel-vs-oracle tolerance: XLA may fuse `x + sigma * noise` into an FMA
+# on one side of the pallas boundary and not the other, so decoded frames
+# agree to ~1 float32 ulp, not bitwise (see the kernel package docstring);
+# SIZES are scalar math outside the kernel and must match exactly.
+_TX_TOL = 1e-6
+_TX_CFG = CodecConfig()
+
+
+def _tx_inputs(r, C, N, H, W):
+    frames = jnp.asarray(r.uniform(0, 1, (C, N, H, W)).astype(np.float32))
+    pix = jnp.asarray(
+        r.uniform(H * W * 0.2, H * W, C).astype(np.float32))
+    b = jnp.asarray(r.choice(_TX_CFG.bitrates_kbps, C).astype(np.float32))
+    res = jnp.asarray(r.choice(_TX_CFG.resolutions, C).astype(np.float32))
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(int(r.integers(0, 2**31))), jnp.arange(C))
+    return frames, pix, b, res, keys
+
+
+@pytest.mark.parametrize("C,N,H,W", [
+    (3, 4, 64, 64), (5, 2, 48, 96), (2, 6, 96, 64), (8, 3, 32, 32),
+])
+def test_tx_codec_matches_oracle(C, N, H, W, rng):
+    frames, pix, b, res, keys = _tx_inputs(rng, C, N, H, W)
+    dk, sk = tx_ops.encode_fleet(_TX_CFG, frames, pix, b, res, keys,
+                                 use_kernel=True)
+    dr, sr = tx_ops.encode_fleet(_TX_CFG, frames, pix, b, res, keys,
+                                 use_kernel=False)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), atol=_TX_TOL)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+
+def test_tx_codec_num_frames_override(rng):
+    """The reducto path's traced kept-frame count: n_eff != shape N must
+    recharge effective pixels identically on both sides."""
+    C, N, H, W = 4, 6, 64, 64
+    frames, pix, b, res, keys = _tx_inputs(rng, C, N, H, W)
+    n_eff = jnp.asarray(rng.integers(1, N + 1, C).astype(np.float32))
+    dk, sk = tx_ops.encode_fleet(_TX_CFG, frames, pix, b, res, keys,
+                                 num_frames=n_eff, use_kernel=True)
+    dr, sr = tx_ops.encode_fleet(_TX_CFG, frames, pix, b, res, keys,
+                                 num_frames=n_eff, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), atol=_TX_TOL)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+    # the override must matter where bpp is rate-sensitive: at the lowest
+    # bitrate over the full frame, a 1-frame charge quantizes much finer
+    # than the full-N charge (bitrate-mode sizes depend only on b, so the
+    # observable is the decoded frames)
+    pix_full = jnp.full((C,), H * W, jnp.float32)
+    b_low = jnp.full((C,), float(_TX_CFG.bitrates_kbps[0]), jnp.float32)
+    d_one, _ = tx_ops.encode_fleet(_TX_CFG, frames, pix_full, b_low, res,
+                                   keys, num_frames=jnp.ones((C,)),
+                                   use_kernel=True)
+    d_full, _ = tx_ops.encode_fleet(_TX_CFG, frames, pix_full, b_low, res,
+                                    keys, use_kernel=True)
+    assert not np.allclose(np.asarray(d_one), np.asarray(d_full), atol=1e-4)
+
+
+@pytest.mark.parametrize("with_res", [False, True])
+def test_tx_codec_crf_matches_oracle(with_res, rng):
+    """CRF mode: res=None skips the blur select on both sides; a res
+    vector routes the same blur branches and charges the r^2 term."""
+    C, N, H, W = 4, 3, 64, 96
+    frames, pix, _, res, keys = _tx_inputs(rng, C, N, H, W)
+    n_eff = jnp.asarray(rng.integers(1, N + 1, C).astype(np.float32))
+    kw = dict(res=res if with_res else None, num_frames=n_eff)
+    dk, sk = tx_ops.encode_fleet_crf(_TX_CFG, frames, pix, keys,
+                                     use_kernel=True, **kw)
+    dr, sr = tx_ops.encode_fleet_crf(_TX_CFG, frames, pix, keys,
+                                     use_kernel=False, **kw)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), atol=_TX_TOL)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(C=st.integers(1, 6), N=st.integers(1, 6), hmul=st.integers(1, 3),
+       wmul=st.integers(1, 3), override=st.integers(0, 1),
+       seed=st.integers(0, 50))
+def test_tx_codec_hypothesis(C, N, hmul, wmul, override, seed):
+    """Parity over frame counts / non-multiple-of-8 resolutions / the
+    num_frames override path — every camera drawing its own resolution so
+    all three blur branches (and the identity) are exercised."""
+    H, W = 24 * hmul, 24 * wmul     # 24: not divisible by the k=8 pool
+    r = np.random.default_rng(seed)
+    frames, pix, b, res, keys = _tx_inputs(r, C, N, H, W)
+    n_eff = (jnp.asarray(r.integers(1, N + 1, C).astype(np.float32))
+             if override else None)
+    dk, sk = tx_ops.encode_fleet(_TX_CFG, frames, pix, b, res, keys,
+                                 num_frames=n_eff, use_kernel=True)
+    dr, sr = tx_ops.encode_fleet(_TX_CFG, frames, pix, b, res, keys,
+                                 num_frames=n_eff, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), atol=_TX_TOL)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+
+def test_tx_codec_oracle_is_scalar_codec(rng):
+    """The ref module IS the vmapped scalar codec: spot-check one camera
+    against a direct ``codec.encode_segment`` call, bitwise."""
+    from repro.core import codec as codec_mod
+    C, N, H, W = 3, 4, 48, 48
+    frames, pix, b, res, keys = _tx_inputs(rng, C, N, H, W)
+    dr, sr = tx_ref.encode_fleet_ref(_TX_CFG, frames, pix, b, res, keys)
+    for i in (0, C - 1):
+        d1, s1 = codec_mod.encode_segment(_TX_CFG, frames[i], pix[i], b[i],
+                                          res[i], keys[i])
+        np.testing.assert_array_equal(np.asarray(dr[i]), np.asarray(d1))
+        np.testing.assert_array_equal(np.asarray(sr[i]), np.asarray(s1))

@@ -227,6 +227,68 @@ def test_watchdog_rebaseline_on_rung_change(detectors):
     assert len(degrades) == 1 and runner.rung == 1
 
 
+def test_supervisor_recovers_and_rebaselines(detectors):
+    """Regression (ladder recovery): ``EpisodeSupervisor`` must climb BACK
+    one rung after ``recover_after`` consecutive healthy runs at a degraded
+    rung, and EVERY rung change — degrade or recover — must rebaseline the
+    watchdog so the new rung's EMA is never seeded from the other rung's
+    wall times.  Pre-fix the supervisor never recovered and never
+    rebaselined."""
+    class _ScriptedDog:
+        """Scripted verdicts + a rebaseline call counter."""
+        def __init__(self, verdicts):
+            self.verdicts = list(verdicts)
+            self.rebaselines = 0
+
+        def record(self, step, t):
+            return self.verdicts.pop(0)
+
+        def rebaseline(self):
+            self.rebaselines += 1
+
+    scfg, trace, faults = _stream_inputs(2, "none")
+    s = harness.build_system(detectors, "episode", scfg)
+    s._key = jax.random.PRNGKey(1234)
+    sup = sched_mod.EpisodeSupervisor(
+        s, sched_mod.SupervisorConfig(recover_after=2))
+    dog = _ScriptedDog(["replace", "ok", "ok", "ok"])
+    sup.watchdog = dog
+    scene = DeviceScene(scfg)
+    for _ in range(4):
+        sup.run(scene, trace, method="static", faults=faults)
+
+    kinds = [(e["kind"], e.get("to")) for e in sup.events
+             if e["kind"] in ("degrade", "recover")]
+    assert kinds == [("degrade", "episode_chunked"), ("recover", "episode")]
+    assert sup.mode == "episode"             # climbed back to the fast rung
+    # one rebaseline per rung change: the watchdog degrade + the recovery
+    assert dog.rebaselines == 2
+    # run 4 happened back at the fast rung with a FRESH streak
+    assert sup._ok_streak == 0 or sup._rung == 0
+
+
+def test_recovered_watchdog_baseline_not_seeded_from_degraded_rung():
+    """The seeding contract the supervisor's rebaseline call exists for: a
+    recovered (faster) rung gated against the degraded rung's 5x walls
+    would MASK real stragglers; a fresh warmup catches them."""
+    from repro.ft import watchdog as ft_watchdog
+    cfg = WatchdogConfig(warmup_steps=1, escalate_after=1)
+
+    poisoned = ft_watchdog.Watchdog(cfg)
+    fresh = ft_watchdog.Watchdog(cfg)
+    for i in range(6):
+        poisoned.record(i, 5.0)              # degraded-rung walls
+        fresh.record(i, 5.0)
+    fresh.rebaseline()                       # what recovery must do
+    for dog in (poisoned, fresh):
+        assert dog.record(10, 1.0) == "ok"   # healthy-rung walls
+        assert dog.record(11, 1.0) == "ok"
+    # a genuine healthy-rung straggler (4x): the poisoned baseline masks
+    # it, the rebaselined one trips
+    assert poisoned.record(12, 4.0) == "ok"
+    assert fresh.record(12, 4.0) == "replace"
+
+
 # -- bounded ingest + drop accounting ------------------------------------------
 
 def test_bounded_queue_drops_and_restores_accounting(detectors, tmp_path):
